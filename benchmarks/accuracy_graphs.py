@@ -1,0 +1,67 @@
+"""Paper Figures 2–3: model accuracy across communication graphs × scales.
+
+Mini-ResNet image classification (the paper's CIFAR10 track) trained with
+the five SGD implementations at two training scales.  Derived column:
+final test accuracy — the paper's claim is the connectivity ordering
+ring <= torus/exponential <= complete at matched iterations.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, save_json, sweep_topologies
+from repro.models.common import init_params
+from repro.models.paper_models import (
+    mini_resnet_apply, mini_resnet_defs, mini_resnet_loss, synthetic_images,
+)
+from repro.optim.sgd import sgd
+
+TOPOLOGIES = ["c_complete", "d_complete", "d_exponential", "d_torus", "d_ring"]
+
+
+def _batch_fn(key, step, n):
+    b = synthetic_images(jax.random.fold_in(key, step), batch=8 * n)
+    return {
+        "images": b["images"].reshape(n, 8, *b["images"].shape[1:]),
+        "labels": b["labels"].reshape(n, 8),
+    }
+
+
+def _eval_fn(params):
+    b = synthetic_images(jax.random.PRNGKey(999), batch=256, noise=0.6)
+    logits = mini_resnet_apply(params, b["images"])
+    return jnp.mean((jnp.argmax(logits, -1) == b["labels"]).astype(jnp.float32))
+
+
+def run(steps: int = 120, scales=(8, 16)) -> list[Row]:
+    rows = []
+    payload = {}
+    for n in scales:
+        params0 = init_params(mini_resnet_defs(), jax.random.PRNGKey(0))
+        res = sweep_topologies(
+            loss_fn=mini_resnet_loss,
+            params0=params0,
+            batch_fn=_batch_fn,
+            eval_fn=_eval_fn,
+            topologies=TOPOLOGIES,
+            n_nodes=n,
+            steps=steps,
+            lr=0.1,
+            optimizer=sgd(momentum=0.9),
+            seed=n,
+        )
+        for name, r in res.items():
+            rows.append(
+                Row(
+                    f"fig3/resnet/{name}/n{n}",
+                    r["us_per_step"],
+                    f"acc={r['final_eval']:.3f}",
+                )
+            )
+        payload[f"n{n}"] = {
+            k: {"acc": v["final_eval"], "losses": v["losses"][::5]}
+            for k, v in res.items()
+        }
+    save_json("accuracy_graphs", payload)
+    return rows

@@ -1,0 +1,87 @@
+"""Shared harness for the DBench benchmark reproductions.
+
+Each benchmark module exposes ``run() -> list[Row]`` where a Row is
+``(name, us_per_call, derived)`` — one CSV line per paper table/figure cell.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dbench import DBenchRecorder
+from repro.core.dsgd import make_topology
+from repro.core.simulator import DecentralizedSimulator
+from repro.optim.sgd import Optimizer
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+class Row(NamedTuple):
+    name: str
+    us_per_call: float
+    derived: str
+
+
+def save_json(name: str, payload) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+def sweep_topologies(
+    *,
+    loss_fn: Callable,
+    params0,
+    batch_fn: Callable[[jax.Array, int, int], dict],  # (key, step, n) -> stacked batch
+    eval_fn: Callable | None,
+    topologies: list[str],
+    n_nodes: int,
+    steps: int,
+    lr: float,
+    optimizer: Optimizer,
+    steps_per_epoch: int = 10,
+    seed: int = 0,
+    topo_kwargs: dict | None = None,
+    collect_norms: bool = True,
+):
+    """Run every SGD implementation on identical data; return per-topo results."""
+    out = {}
+    for name in topologies:
+        kw = (topo_kwargs or {}).get(name, {})
+        topo = make_topology(name, n_nodes, **kw)
+        sim = DecentralizedSimulator(
+            loss_fn, optimizer, topo, collect_norms=collect_norms
+        )
+        state = sim.init(params0)
+        rec = DBenchRecorder(impl=name, n_nodes=n_nodes)
+        key = jax.random.PRNGKey(seed)
+        t0 = time.perf_counter()
+        losses = []
+        for t in range(steps):
+            key, sub = jax.random.split(key)
+            batch = batch_fn(sub, t, n_nodes)
+            state, loss, norms = sim.train_step(
+                state, batch, lr, epoch=t // steps_per_epoch
+            )
+            losses.append(float(jnp.mean(loss)))
+            rec.record(t, np.asarray(loss), np.asarray(norms))
+        wall = time.perf_counter() - t0
+        final_eval = (
+            float(eval_fn(state.mean_params())) if eval_fn is not None else float("nan")
+        )
+        out[name] = {
+            "losses": losses,
+            "final_eval": final_eval,
+            "us_per_step": 1e6 * wall / steps,
+            "recorder": rec,
+            "comm_degree": topo.degree_at(0),
+        }
+    return out

@@ -1,0 +1,55 @@
+"""Paper §3.2 / Observation 3: linear vs sqrt LR scaling at scale.
+
+Reproduces the tuned_* rescue experiment: with aggressive linear scaling a
+large-scale decentralized run destabilizes; square-root scaling of the same
+base LR recovers convergence.  Derived: final loss under each policy.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import Row, save_json, sweep_topologies
+from repro.models.common import init_params
+from repro.models.paper_models import lstm_defs, lstm_loss
+from repro.optim.schedules import lr_scale
+from repro.optim.sgd import sgd
+from benchmarks.variance import _lm_batch_fn
+
+N = 16
+BASE_LR = 1.0
+
+
+def run(steps: int = 50) -> list[Row]:
+    rows, payload = [], {}
+    for policy in ("linear", "sqrt"):
+        scale = lr_scale(
+            policy, global_batch=4 * N, base_batch=24, graph_degree=N - 1
+        )
+        params0 = init_params(lstm_defs(vocab=128, d=64), jax.random.PRNGKey(2))
+        res = sweep_topologies(
+            loss_fn=lstm_loss,
+            params0=params0,
+            batch_fn=_lm_batch_fn(128, 24),
+            eval_fn=None,
+            topologies=["d_complete"],
+            n_nodes=N,
+            steps=steps,
+            lr=BASE_LR * scale,
+            optimizer=sgd(momentum=0.9),
+            collect_norms=False,
+        )
+        r = res["d_complete"]
+        import numpy as np
+
+        final = float(np.mean(r["losses"][-5:]))
+        diverged = not np.isfinite(final) or final > r["losses"][0]
+        rows.append(
+            Row(
+                f"obs3/lr_{policy}/n{N}",
+                r["us_per_step"],
+                f"lr={BASE_LR*scale:.3f} final_loss={final:.3f} diverged={diverged}",
+            )
+        )
+        payload[policy] = {"lr": BASE_LR * scale, "final": final, "diverged": bool(diverged)}
+    save_json("lr_scaling", payload)
+    return rows

@@ -1,0 +1,56 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (harness contract).  JSON payloads
+land in benchmarks/results/ and feed EXPERIMENTS.md.
+
+  accuracy_graphs  Fig 2–3   accuracy vs communication graph × scale
+  variance         Fig 4–5   gini dispersion + variance-rank integration
+  ada              Fig 7     Ada vs static graphs (+ comm volume)
+  comm_cost        Table 1   per-graph communication model
+  lr_scaling       §3.2      linear vs sqrt LR scaling rescue
+  step_time        —         mixing-implementation microbench
+
+Run everything:       PYTHONPATH=src python -m benchmarks.run
+Run one:              PYTHONPATH=src python -m benchmarks.run --only ada
+Quick smoke:          PYTHONPATH=src python -m benchmarks.run --fast
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--fast", action="store_true", help="fewer steps/scales")
+    args = ap.parse_args()
+
+    from benchmarks import accuracy_graphs, ada, comm_cost, lr_scaling, step_time, variance
+
+    suites = {
+        "comm_cost": lambda: comm_cost.run(),
+        "step_time": lambda: step_time.run(),
+        "accuracy_graphs": lambda: accuracy_graphs.run(
+            steps=40 if args.fast else 120, scales=(8,) if args.fast else (8, 16)
+        ),
+        "variance": lambda: variance.run(steps=30 if args.fast else 50),
+        "ada": lambda: ada.run(steps=40 if args.fast else 120),
+        "lr_scaling": lambda: lr_scaling.run(steps=30 if args.fast else 40),
+    }
+    if args.only:
+        suites = {k: v for k, v in suites.items() if k == args.only}
+        if not suites:
+            sys.exit(f"unknown suite {args.only!r}")
+
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        t0 = time.time()
+        for row in fn():
+            print(f"{row.name},{row.us_per_call:.1f},{row.derived}")
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Microbenchmarks: mixing implementations and kernel oracles (wall-clock).
+
+Derived: relative speed of dense-matrix vs circulant-shift mixing (the
+faithful-baseline vs optimized-schedule gap, measurable even on CPU) and
+per-step simulator overhead.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, save_json
+from repro.core.graphs import make_graph
+from repro.core.mixing import mix_dense, mix_shift
+
+
+def _time(fn, *args, reps=20):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return 1e6 * (time.perf_counter() - t0) / reps
+
+
+def run() -> list[Row]:
+    rows, payload = [], {}
+    n = 16
+    for size in (1 << 16, 1 << 20):
+        x = {"w": jax.random.normal(jax.random.PRNGKey(0), (n, size))}
+        for kind in ("ring", "exponential", "complete"):
+            g = make_graph(kind, n)
+            w = jnp.asarray(g.mixing_matrix(), jnp.float32)
+            t_dense = _time(jax.jit(lambda t: mix_dense(t, w)), x)
+            t_shift = _time(jax.jit(lambda t: mix_shift(t, g)), x)
+            rows.append(
+                Row(
+                    f"mixing/{kind}/p{size}",
+                    t_shift,
+                    f"dense_us={t_dense:.0f} shift_us={t_shift:.0f} "
+                    f"speedup={t_dense/max(t_shift,1e-9):.2f}x",
+                )
+            )
+            payload[f"{kind}/p{size}"] = {"dense": t_dense, "shift": t_shift}
+    save_json("step_time", payload)
+    return rows

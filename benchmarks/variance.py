@@ -1,0 +1,67 @@
+"""Paper Figures 4–5: parameter-tensor variance (gini) across graphs +
+rank-integration analysis.
+
+Derived columns: early-stage mean gini (iterations 0–15) per topology —
+the paper's Observation 4 is that early variance orders inversely with
+connectivity — and the mean variance rank (Figure 5).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import Row, save_json, sweep_topologies
+from repro.core.dbench import rank_analysis
+from repro.models.common import init_params
+from repro.models.paper_models import lstm_defs, lstm_loss
+from repro.optim.sgd import sgd
+
+TOPOLOGIES = ["c_complete", "d_complete", "d_exponential", "d_torus", "d_ring"]
+
+
+def _lm_batch_fn(vocab, seq):
+    from repro.data import SyntheticLM
+
+    src = SyntheticLM(vocab=vocab, seq_len=seq, seed=0)
+
+    def fn(key, step, n):
+        import jax.numpy as jnp
+
+        b = src.stacked(n, step, 4)
+        return {k: jnp.asarray(v) for k, v in b.items()}
+
+    return fn
+
+
+def run(steps: int = 50, n_nodes: int = 16) -> list[Row]:
+    params0 = init_params(lstm_defs(vocab=128, d=64), jax.random.PRNGKey(1))
+    res = sweep_topologies(
+        loss_fn=lstm_loss,
+        params0=params0,
+        batch_fn=_lm_batch_fn(128, 24),
+        eval_fn=None,
+        topologies=TOPOLOGIES,
+        n_nodes=n_nodes,
+        steps=steps,
+        lr=0.5,
+        optimizer=sgd(momentum=0.9),
+    )
+    rows, payload = [], {}
+    gini_series = {}
+    for name, r in res.items():
+        g = r["recorder"].metric_series("gini")  # (steps, n_leaves)
+        gini_series[name] = g
+        early = float(g[:15].mean())
+        late = float(g[-10:].mean())
+        rows.append(
+            Row(f"fig4/gini/{name}/n{n_nodes}", r["us_per_step"],
+                f"early_gini={early:.4f} late_gini={late:.4f}")
+        )
+        payload[name] = {"early_gini": early, "late_gini": late,
+                         "gini_mean": g.mean(-1).tolist()[::5]}
+    ranks = rank_analysis({k: v for k, v in gini_series.items()})
+    for name, rk in ranks.items():
+        rows.append(Row(f"fig5/rank/{name}", 0.0, f"mean_rank={float(rk.mean()):.2f}"))
+        payload[name]["mean_rank"] = float(rk.mean())
+    save_json("variance", payload)
+    return rows

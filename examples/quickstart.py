@@ -1,0 +1,73 @@
+"""Quickstart: decentralized data-parallel training in 60 lines.
+
+Trains a small transformer LM on 8 simulated gossip nodes with the Ada
+adaptive communication graph and prints the DBench variance probe as the
+graph anneals from dense to sparse.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import make_topology
+from repro.core.dbench import DBenchRecorder, gini
+from repro.core.simulator import DecentralizedSimulator
+from repro.data import SyntheticLM, node_batch_iterator
+from repro.models import transformer as tfm
+from repro.optim import constant, get_optimizer
+
+N_NODES = 8
+STEPS = 60
+STEPS_PER_EPOCH = 10
+
+# a small dense-family config (same code path as the 8B assigned arch)
+cfg = dataclasses.replace(
+    get_config("granite-8b-reduced"),
+    d_model=128, n_heads=4, n_kv=2, d_head=32, d_ff=256, vocab=256,
+    dtype=jnp.float32, remat=False,
+)
+
+# Ada: start densely connected, anneal to a ring (paper Algorithm 1)
+topology = make_topology("d_ada", N_NODES, k0=6, gamma_k=1.0)
+print(topology.describe())
+
+sim = DecentralizedSimulator(
+    loss_fn=lambda p, b: tfm.loss_fn(p, cfg, b),
+    optimizer=get_optimizer("adamw", weight_decay=0.0),
+    topology=topology,
+    collect_norms=True,
+)
+
+src = SyntheticLM(vocab=cfg.vocab, seq_len=32, seed=0, structure=0.9)
+params0 = tfm.init_model(cfg, jax.random.PRNGKey(0), tp_size=1)
+recorder = DBenchRecorder(impl="d_ada", n_nodes=N_NODES)
+
+state, hist = sim.run(
+    params0,
+    node_batch_iterator(src, N_NODES, per_node_batch=4),
+    n_steps=STEPS,
+    lr_schedule=constant(1e-2),
+    steps_per_epoch=STEPS_PER_EPOCH,
+    recorder=recorder,
+)
+
+print(f"\n{'step':>5} {'loss':>8} {'gini(param norms)':>18} {'graph degree':>13}")
+for i, t in enumerate(recorder.iterations):
+    if t % 10 == 0:
+        g = float(gini(recorder.norms[i]).mean())
+        deg = topology.degree_at(t // STEPS_PER_EPOCH)
+        print(f"{t:5d} {recorder.losses[i].mean():8.4f} {g:18.5f} {deg:13d}")
+
+final = state.mean_params()
+print(f"\nfinal mean-replica loss: {hist['loss'][-1]:.4f} "
+      f"(from {hist['loss'][0]:.4f})")
+print("replica consensus spread:",
+      float(max(np.abs(np.asarray(l) - np.asarray(l).mean(0)).max()
+                for l in jax.tree.leaves(state.params))))

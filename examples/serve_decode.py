@@ -1,0 +1,65 @@
+"""Batched serving demo: prefill-free replayed generation with KV cache,
+greedy and sampled, on the ServeEngine used by the decode dry-runs.
+
+  PYTHONPATH=src python examples/serve_decode.py [--arch granite-8b] [--new 16]
+"""
+import argparse
+import dataclasses
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.launch.mesh import make_mesh
+from repro.launch.serve import ServeEngine
+from repro.models import transformer as tfm
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-8b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--new", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(
+        get_config(args.arch + "-reduced"), dtype=jnp.float32, remat=False
+    )
+    mesh = make_mesh((1, 1), ("data", "model"))
+    eng = ServeEngine(cfg, mesh)
+    params = tfm.init_model(cfg, jax.random.PRNGKey(0), tp_size=1)
+
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab
+    )
+    print(f"arch={cfg.name} (reduced) | batch={args.batch} | "
+          f"prompt={args.prompt_len} | generating {args.new} tokens")
+
+    t0 = time.time()
+    greedy = eng.generate(params, prompts, n_new=args.new,
+                          max_len=args.prompt_len + args.new)
+    t1 = time.time()
+    sampled = eng.generate(params, prompts, n_new=args.new,
+                           max_len=args.prompt_len + args.new,
+                           temperature=args.temperature,
+                           key=jax.random.PRNGKey(2))
+    t2 = time.time()
+
+    for i in range(args.batch):
+        print(f"  req{i}: prompt={prompts[i].tolist()}")
+        print(f"        greedy  -> {greedy[i].tolist()}")
+        print(f"        sampled -> {sampled[i].tolist()}")
+    tok_s = args.batch * args.new / (t1 - t0)
+    print(f"\ngreedy: {t1-t0:.2f}s ({tok_s:.1f} tok/s incl. prompt replay); "
+          f"sampled: {t2-t1:.2f}s")
+    assert greedy.shape == (args.batch, args.new)
+
+
+if __name__ == "__main__":
+    main()

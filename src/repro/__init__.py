@@ -1,0 +1,2 @@
+"""repro: decentralized data-parallel training at scale (Ada + DBench) in JAX."""
+__version__ = "0.1.0"

@@ -1,0 +1,83 @@
+"""Checkpointing: flat-keyed npz snapshots of arbitrary pytrees.
+
+Stores (params, opt_state, step, rng) with tree structure recovered from the
+flattened key paths.  Host-side (fully addressable) arrays; for the
+production mesh, the launcher gathers per-node shards before saving (the
+decentralized state is the *stacked* (G, ...) tree, so one file captures
+every replica).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]
+
+_SEP = "/"
+
+
+def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_part(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _part(p) -> str:
+    if isinstance(p, jax.tree_util.DictKey):
+        return str(p.key)
+    if isinstance(p, jax.tree_util.SequenceKey):
+        return f"#{p.idx}"
+    if isinstance(p, jax.tree_util.GetAttrKey):
+        return f"@{p.name}"
+    return str(p)
+
+
+def save_checkpoint(directory: str, step: int, state: PyTree, *, keep: int = 3) -> str:
+    """Write ``<dir>/step_<n>.npz`` (+ manifest); prune to ``keep`` newest."""
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"step_{step:010d}.npz")
+    flat = _flatten(state)
+    np.savez(path, **flat)
+    with open(os.path.join(directory, "manifest.json"), "w") as f:
+        json.dump({"latest_step": step}, f)
+    ckpts = sorted(p for p in os.listdir(directory) if p.startswith("step_"))
+    for old in ckpts[:-keep]:
+        os.remove(os.path.join(directory, old))
+    return path
+
+
+def latest_step(directory: str) -> int | None:
+    mf = os.path.join(directory, "manifest.json")
+    if not os.path.exists(mf):
+        return None
+    with open(mf) as f:
+        return json.load(f)["latest_step"]
+
+
+def load_checkpoint(directory: str, template: PyTree, step: int | None = None) -> tuple[PyTree, int]:
+    """Restore into the structure of ``template`` (shapes validated)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint manifest in {directory}")
+    path = os.path.join(directory, f"step_{step:010d}.npz")
+    data = np.load(path)
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in paths:
+        key = _SEP.join(_part(x) for x in p)
+        arr = data[key]
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(
+                f"checkpoint leaf {key}: shape {arr.shape} != template {np.shape(leaf)}"
+            )
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves), step

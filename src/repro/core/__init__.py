@@ -1,0 +1,16 @@
+"""Core: the paper's contribution — decentralized data parallelism.
+
+graphs     communication graphs (ring/torus/ring-lattice/exponential/complete)
+mixing     dense / circulant-shift / ppermute gossip realizations
+ada        Ada adaptive ring-lattice schedule (Algorithm 1)
+dsgd       topology registry for the five SGD implementations (+ Ada)
+dbench     white-box variance instrumentation (gini et al., rank analysis)
+simulator  vmap-based paper-faithful multi-node engine (CPU oracle)
+"""
+from repro.core.ada import AdaSchedule, default_k0
+from repro.core.dsgd import TOPOLOGIES, Topology, make_topology
+from repro.core.graphs import (
+    CommGraph, Complete, Exponential, Ring, RingLattice, Torus, make_graph,
+    spectral_gap,
+)
+from repro.core.simulator import DecentralizedSimulator, SimState

@@ -1,0 +1,125 @@
+"""Topology registry for (de)centralized SGD (paper §3.1.2).
+
+The five benchmarked SGD implementations, plus Ada:
+
+  c_complete      centralized: all-reduce *gradients* (PyTorch-DDP analogue)
+  d_complete      decentralized: average *parameters* over the complete graph
+  d_ring          decentralized, ring
+  d_torus         decentralized, torus
+  d_exponential   decentralized, directed exponential graph
+  d_ring_lattice  decentralized, static ring lattice (coordination number k)
+  d_ada           decentralized, Ada adaptive ring lattice (Algorithm 1)
+
+A ``Topology`` answers one question per epoch: *which mixing graph is in
+force* (``None`` for the centralized implementation, which mixes gradients
+globally instead).  The engines (``core/simulator.py`` for vmap-on-CPU,
+``launch/train.py`` for shard_map-on-mesh) consume it.
+
+Update order (paper §2.1, Lian et al. 2017 equivalence):
+  ``post``: local SGD update, then gossip-average parameters (default)
+  ``pre`` : gossip-average parameters, then local SGD update
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.ada import AdaSchedule, default_k0
+from repro.core.graphs import CommGraph, make_graph
+
+__all__ = ["Topology", "make_topology", "TOPOLOGIES"]
+
+TOPOLOGIES = (
+    "c_complete",
+    "d_complete",
+    "d_ring",
+    "d_torus",
+    "d_exponential",
+    "d_ring_lattice",
+    "d_ada",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """A (possibly epoch-varying) communication topology."""
+
+    name: str
+    n_nodes: int
+    centralized: bool = False
+    static_graph: Optional[CommGraph] = None
+    ada: Optional[AdaSchedule] = None
+    mix_order: str = "post"  # "post" | "pre"
+
+    def graph_at(self, epoch: int = 0) -> Optional[CommGraph]:
+        """The parameter-mixing graph at an epoch; None => centralized."""
+        if self.centralized:
+            return None
+        if self.ada is not None:
+            return self.ada.graph_at(epoch)
+        return self.static_graph
+
+    @property
+    def adaptive(self) -> bool:
+        return self.ada is not None
+
+    def degree_at(self, epoch: int = 0) -> int:
+        g = self.graph_at(epoch)
+        return self.n_nodes - 1 if g is None else g.degree
+
+    def describe(self) -> str:
+        if self.centralized:
+            return f"{self.name}: centralized all-reduce over {self.n_nodes} nodes"
+        if self.ada is not None:
+            return (
+                f"{self.name}: Ada ring-lattice k0={self.ada.k0} "
+                f"gamma_k={self.ada.gamma_k} over {self.n_nodes} nodes"
+            )
+        return f"{self.name}: static {self.static_graph.describe()}"
+
+
+def make_topology(
+    name: str,
+    n_nodes: int,
+    *,
+    k: int | None = None,
+    k0: int | None = None,
+    gamma_k: float = 0.02,
+    mix_order: str = "post",
+    torus_grid: tuple[int, int] | None = None,
+) -> Topology:
+    """Build one of the benchmarked topologies.
+
+    Args:
+      name: one of ``TOPOLOGIES``.
+      n_nodes: gossip node count (the training scale).
+      k: coordination number for ``d_ring_lattice``.
+      k0, gamma_k: Ada hyperparameters (default k0: paper's max(n//9, 2)).
+    """
+    if mix_order not in ("post", "pre"):
+        raise ValueError(f"mix_order must be 'post'|'pre', got {mix_order!r}")
+    base = dict(name=name, n_nodes=n_nodes, mix_order=mix_order)
+    if name == "c_complete":
+        return Topology(centralized=True, **base)
+    if name == "d_complete":
+        return Topology(static_graph=make_graph("complete", n_nodes), **base)
+    if name == "d_ring":
+        return Topology(static_graph=make_graph("ring", n_nodes), **base)
+    if name == "d_torus":
+        return Topology(
+            static_graph=make_graph("torus", n_nodes, grid=torus_grid), **base
+        )
+    if name == "d_exponential":
+        return Topology(static_graph=make_graph("exponential", n_nodes), **base)
+    if name == "d_ring_lattice":
+        if k is None:
+            raise ValueError("d_ring_lattice requires k")
+        return Topology(static_graph=make_graph("ring_lattice", n_nodes, k=k), **base)
+    if name == "d_ada":
+        sched = AdaSchedule(
+            n_nodes=n_nodes,
+            k0=k0 if k0 is not None else default_k0(n_nodes),
+            gamma_k=gamma_k,
+        )
+        return Topology(ada=sched, **base)
+    raise ValueError(f"unknown topology {name!r}; one of {TOPOLOGIES}")

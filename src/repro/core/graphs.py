@@ -1,0 +1,257 @@
+"""Communication graphs for decentralized data-parallel training.
+
+Implements the five representative graphs of the paper (Table 1 / Figure 1):
+ring, torus, ring lattice, exponential, complete — plus the Ada adaptive
+ring-lattice (Algorithm 1).
+
+Every graph here is *circulant* on the flattened node index (ring,
+ring-lattice, exponential) or grid-circulant (torus).  A circulant gossip
+matrix is fully described by a set of (offset, weight) pairs:
+
+    W[i, j] = weight(d)   where  d = (j - i) mod n  is a registered offset
+
+which lets the SPMD engine realize one mixing step as a sum of
+``jax.lax.ppermute`` collectives (one per offset) instead of a dense n×n
+matrix product — see ``core/mixing.py``.
+
+Weights follow Algorithm 1 of the paper: uniform ``1/(deg+1)`` over the
+closed neighborhood (self included), which makes W row-stochastic.  For
+undirected graphs W is symmetric (doubly stochastic).  The directed
+exponential graph is row-stochastic only, as in the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import numpy as np
+
+__all__ = [
+    "CommGraph",
+    "Ring",
+    "Torus",
+    "RingLattice",
+    "Exponential",
+    "Complete",
+    "make_graph",
+    "spectral_gap",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class CommGraph:
+    """A communication graph over ``n`` gossip nodes.
+
+    Attributes:
+      name: human-readable graph name.
+      n: number of nodes.
+      offsets: circulant offsets ``d`` (mod n); node ``i`` receives from
+        node ``(i + d) % n`` for every ``d`` in ``offsets``.  ``0`` (self)
+        is implicit and never listed.
+      self_weight / neighbor_weight: mixing weights (uniform per Alg. 1).
+      directed: whether the edge set is symmetric.
+    """
+
+    name: str
+    n: int
+    offsets: tuple[int, ...]
+    directed: bool = False
+
+    def __post_init__(self):
+        if self.n < 1:
+            raise ValueError(f"graph needs >=1 node, got n={self.n}")
+        offs = tuple(sorted({d % self.n for d in self.offsets} - {0}))
+        object.__setattr__(self, "offsets", offs)
+
+    # -- basic characteristics (Table 1) ------------------------------------
+    @property
+    def degree(self) -> int:
+        """Number of in-neighbors per node (excluding self)."""
+        return len(self.offsets)
+
+    @property
+    def num_edges(self) -> int:
+        """Directed edge count (undirected edges counted once)."""
+        e = self.n * self.degree
+        return e if self.directed else e // 2
+
+    @property
+    def self_weight(self) -> float:
+        return 1.0 / (self.degree + 1)
+
+    @property
+    def neighbor_weight(self) -> float:
+        return 1.0 / (self.degree + 1)
+
+    @property
+    def is_symmetric(self) -> bool:
+        offs = set(self.offsets)
+        return all((-d) % self.n in offs for d in offs)
+
+    # -- matrix / schedule views --------------------------------------------
+    def mixing_matrix(self, weights: str = "uniform") -> np.ndarray:
+        """Dense row-stochastic mixing matrix W (float64).
+
+        weights:
+          "uniform"    — 1/(deg+1) everywhere (paper Algorithm 1).
+          "metropolis" — Metropolis–Hastings: W_ij = 1/(1+max(deg_i, deg_j)),
+            W_ii = 1 − Σ_j W_ij.  Doubly stochastic for *any* undirected
+            graph (beyond-paper; coincides with uniform on the regular
+            graphs used here, but correct for irregular topologies too).
+        """
+        w = np.zeros((self.n, self.n), dtype=np.float64)
+        if weights == "metropolis":
+            if self.directed:
+                raise ValueError("metropolis weights need an undirected graph")
+            deg = np.full(self.n, self.degree, dtype=np.float64)
+            for i in range(self.n):
+                for d in self.offsets:
+                    j = (i + d) % self.n
+                    w[i, j] += 1.0 / (1.0 + max(deg[i], deg[j]))
+            np.fill_diagonal(w, 0.0)
+            np.fill_diagonal(w, 1.0 - w.sum(axis=1))
+            return w
+        if weights != "uniform":
+            raise ValueError(f"unknown weight scheme {weights!r}")
+        np.fill_diagonal(w, self.self_weight)
+        for i in range(self.n):
+            for d in self.offsets:
+                w[i, (i + d) % self.n] += self.neighbor_weight
+        return w
+
+    def weighted_offsets(self) -> list[tuple[int, float]]:
+        """(offset, weight) pairs excluding self — drives shift/ppermute mixing."""
+        return [(d, self.neighbor_weight) for d in self.offsets]
+
+    def neighbors(self, i: int) -> list[int]:
+        return [(i + d) % self.n for d in self.offsets]
+
+    def comm_bytes_per_node(self, param_bytes: int) -> int:
+        """Bytes each node sends per mixing step (the paper's cost argument)."""
+        return self.degree * param_bytes
+
+    def describe(self) -> str:
+        return (
+            f"{self.name}(n={self.n}, degree={self.degree}, "
+            f"edges={self.num_edges}, directed={self.directed})"
+        )
+
+
+# ---------------------------------------------------------------------------
+# The five representative graphs (paper Figure 1 / Table 1)
+# ---------------------------------------------------------------------------
+
+def Ring(n: int) -> CommGraph:
+    """Ring: 2 neighbors (±1 hop). Degenerates gracefully for tiny n."""
+    if n <= 1:
+        return CommGraph("ring", n, ())
+    if n == 2:
+        return CommGraph("ring", n, (1,))
+    return CommGraph("ring", n, (1, n - 1))
+
+
+def Torus(n: int, grid: tuple[int, int] | None = None) -> CommGraph:
+    """2-D torus: 4 neighbors (±1 on each grid dimension).
+
+    The node index is flattened row-major over ``grid=(a, b)`` with
+    ``a*b == n``; a torus row/column wrap becomes a circulant offset of the
+    flattened index (±1 and ±b), so torus mixing is still a circulant
+    schedule.  If ``grid`` is not given we pick the most-square factorization.
+    """
+    if n <= 4:
+        return dataclasses.replace(Ring(n), name="torus")
+    if grid is None:
+        a = int(math.isqrt(n))
+        while n % a:
+            a -= 1
+        grid = (a, n // a)
+    a, b = grid
+    if a * b != n:
+        raise ValueError(f"torus grid {grid} does not tile n={n}")
+    if a == 1 or b == 1:
+        return dataclasses.replace(Ring(n), name="torus")
+    # Row neighbors: ±1 within a row of length b. Wrapping i -> i±1 inside the
+    # row is offset ±1 except at row borders; a true row-ring is NOT circulant
+    # in the flat index unless we use offset ±1 with the convention that the
+    # flat ring visits nodes in row-major "boustrophedon"... Keep it exact:
+    # offsets ±1 (flat ring through all nodes) and ±b (column ring).  This is
+    # the standard "twisted torus" embedding used on real interconnects; it
+    # has exactly 4 neighbors per node and 2n edges like the paper's torus.
+    offs = {1, n - 1, b % n, (n - b) % n}
+    return CommGraph("torus", n, tuple(offs))
+
+
+def RingLattice(n: int, k: int) -> CommGraph:
+    """Ring lattice per Algorithm 1: neighbors j ∈ [-k//2, k//2], j != 0.
+
+    ``k`` is the *total neighbor count* (coordination number as used by
+    Algorithm 1, where the mixing weight is 1/(k+1)).  NOTE: the paper's §4.1
+    prose describes 2k neighbors for coordination number k; Algorithm 1 (which
+    we follow) uses k neighbors, k//2 hops on each side.
+    """
+    if n <= 1:
+        return CommGraph(f"ring_lattice(k={k})", n, ())
+    k = max(int(k), 1)
+    half = max(k // 2, 1)
+    half = min(half, (n - 1) // 2 if n > 2 else 1)
+    offs: set[int] = set()
+    for j in range(1, half + 1):
+        offs.add(j % n)
+        offs.add((n - j) % n)
+    offs.discard(0)
+    return CommGraph(f"ring_lattice(k={k})", n, tuple(sorted(offs)))
+
+
+def Exponential(n: int) -> CommGraph:
+    """Directed exponential (expander) graph: neighbors (i + 2^m) % n.
+
+    m = 0, 1, ..., floor(log2(n-1)); degree = floor(log2(n-1)) + 1.
+    """
+    if n <= 1:
+        return CommGraph("exponential", n, (), directed=True)
+    mmax = int(math.floor(math.log2(n - 1))) if n > 2 else 0
+    offs = {pow(2, m) % n for m in range(mmax + 1)}
+    offs.discard(0)
+    return CommGraph("exponential", n, tuple(sorted(offs)), directed=True)
+
+
+def Complete(n: int) -> CommGraph:
+    """Complete graph: every node averages with every other node."""
+    return CommGraph("complete", n, tuple(range(1, n)))
+
+
+_FACTORIES = {
+    "ring": lambda n, **kw: Ring(n),
+    "torus": lambda n, **kw: Torus(n, grid=kw.get("grid")),
+    "ring_lattice": lambda n, **kw: RingLattice(n, kw.get("k", 2)),
+    "exponential": lambda n, **kw: Exponential(n),
+    "complete": lambda n, **kw: Complete(n),
+}
+
+
+def make_graph(kind: str, n: int, **kwargs) -> CommGraph:
+    """Factory: ``make_graph("ring_lattice", 96, k=10)``."""
+    try:
+        return _FACTORIES[kind](n, **kwargs)
+    except KeyError:
+        raise ValueError(
+            f"unknown graph kind {kind!r}; one of {sorted(_FACTORIES)}"
+        ) from None
+
+
+def spectral_gap(graph_or_matrix) -> float:
+    """1 - |lambda_2(W)|: the consensus rate of a mixing matrix.
+
+    Larger gap = faster information spreading (complete: gap = 1).
+    """
+    w = (
+        graph_or_matrix.mixing_matrix()
+        if isinstance(graph_or_matrix, CommGraph)
+        else np.asarray(graph_or_matrix, dtype=np.float64)
+    )
+    if w.shape[0] == 1:
+        return 1.0
+    eig = np.linalg.eigvals(w)
+    mags = np.sort(np.abs(eig))[::-1]
+    return float(1.0 - mags[1])

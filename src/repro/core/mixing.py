@@ -1,0 +1,141 @@
+"""Mixing (gossip averaging) implementations.
+
+Three equivalent realizations of one mixing step  θ ← W θ :
+
+  * ``mix_dense``    — dense mixing-matrix einsum over a stacked replica axis.
+                       Bit-faithful to the paper's equations; used by the CPU
+                       simulator and as the *paper-faithful baseline* in the
+                       perf study (costs an all-gather at scale).
+  * ``mix_shift``    — Σ_d w_d · roll(θ, d) over the stacked axis.  Exploits
+                       the circulant structure; under jit on a sharded axis
+                       XLA lowers each roll to collective-permutes.
+  * ``mix_ppermute`` — explicit ``jax.lax.ppermute`` schedule inside
+                       ``shard_map``; one permute per graph offset, plus the
+                       all-reduce fast path for the complete graph.  This is
+                       the production (beyond-paper-optimized) path.
+
+All three are tested for equivalence (tests/test_mixing.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graphs import CommGraph
+
+PyTree = Any
+
+__all__ = [
+    "mix_dense",
+    "mix_shift",
+    "mix_ppermute",
+    "permutation_for_offset",
+    "mixing_comm_bytes",
+]
+
+
+def _tree_bytes(tree: PyTree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def mixing_comm_bytes(graph: CommGraph, params: PyTree) -> int:
+    """Bytes sent per node per mixing step (analytic model).
+
+    complete graph is realized as an all-reduce: ring-reduced cost
+    2·P·(n-1)/n per node, not (n-1)·P.
+    """
+    p = _tree_bytes(params)
+    if graph.degree == 0:
+        return 0
+    if graph.name == "complete":
+        return int(2 * p * (graph.n - 1) / graph.n)
+    return graph.degree * p
+
+
+# ---------------------------------------------------------------------------
+# Dense (paper-faithful reference)
+# ---------------------------------------------------------------------------
+
+def mix_dense(stacked: PyTree, w: jax.Array | np.ndarray) -> PyTree:
+    """θ ← W θ with a dense (n, n) mixing matrix over leading axis 0."""
+    w = jnp.asarray(w)
+
+    def _mix(x):
+        return jnp.einsum(
+            "ij,j...->i...", w.astype(jnp.float32), x.astype(jnp.float32)
+        ).astype(x.dtype)
+
+    return jax.tree.map(_mix, stacked)
+
+
+# ---------------------------------------------------------------------------
+# Circulant shift (jit-friendly, XLA lowers rolls on sharded axes to
+# collective-permute)
+# ---------------------------------------------------------------------------
+
+def mix_shift(stacked: PyTree, graph: CommGraph) -> PyTree:
+    """θ_i ← w_self·θ_i + Σ_d w_d·θ_{(i+d) mod n}   via jnp.roll."""
+    if graph.degree == 0:
+        return stacked
+    pairs = graph.weighted_offsets()
+    ws = graph.self_weight
+
+    def _mix(x):
+        acc = ws * x.astype(jnp.float32)
+        for d, wd in pairs:
+            # receive from node (i+d): roll the stacked axis by -d
+            acc = acc + wd * jnp.roll(x, -d, axis=0).astype(jnp.float32)
+        return acc.astype(x.dtype)
+
+    return jax.tree.map(_mix, stacked)
+
+
+# ---------------------------------------------------------------------------
+# Explicit collective schedule (production path, inside shard_map)
+# ---------------------------------------------------------------------------
+
+def permutation_for_offset(n: int, d: int) -> list[tuple[int, int]]:
+    """ppermute pairs so that node i receives from node (i + d) % n."""
+    return [((i + d) % n, i) for i in range(n)]
+
+
+def mix_ppermute(
+    local: PyTree,
+    graph: CommGraph,
+    axis_names: str | Sequence[str],
+    *,
+    complete_as_allreduce: bool = True,
+) -> PyTree:
+    """One gossip step for per-node values inside ``shard_map``.
+
+    Args:
+      local: this node's (post-update) parameter pytree.
+      graph: the communication graph; ``graph.n`` must equal the total size
+        of ``axis_names``.
+      axis_names: the manual mesh axis (or tuple of axes) enumerating nodes.
+      complete_as_allreduce: lower the complete graph as ``pmean`` (ring
+        all-reduce, 2P(n-1)/n bytes) instead of n-1 permutes.
+    """
+    if graph.degree == 0:
+        return local
+    if complete_as_allreduce and graph.name == "complete":
+        return jax.tree.map(
+            lambda x: jax.lax.pmean(x.astype(jnp.float32), axis_names).astype(x.dtype),
+            local,
+        )
+
+    n = graph.n
+    pairs = graph.weighted_offsets()
+    ws = graph.self_weight
+
+    def _mix(x):
+        acc = ws * x.astype(jnp.float32)
+        for d, wd in pairs:
+            perm = permutation_for_offset(n, d)
+            acc = acc + wd * jax.lax.ppermute(x, axis_names, perm).astype(jnp.float32)
+        return acc.astype(x.dtype)
+
+    return jax.tree.map(_mix, local)

@@ -1,0 +1,81 @@
+"""Fused gossip-apply kernel: momentum-SGD step + weighted neighbor average.
+
+The decentralized inner loop ends with three elementwise passes over the
+full parameter vector (optimizer update, then the weighted sum of self +
+deg neighbor buffers delivered by the collective-permutes).  Unfused that
+costs ``(deg + 5)`` HBM reads + 3 writes of P; this kernel fuses it into
+``(deg + 3)`` reads + 2 writes with one VMEM-tiled pass:
+
+    m'     = beta * m + g
+    theta* = theta - lr * m'
+    theta' = w_0 * theta* + Σ_i w_i * n_i
+
+Layout: parameters are flattened and blocked 1-D ((block,) VMEM tiles,
+8·128-aligned); neighbor buffers arrive stacked (deg, P) — on TPU these are
+the ppermute landing buffers, so no extra copy.  Weights live in SMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["gossip_update"]
+
+
+def _kernel(w_ref, theta_ref, nbr_ref, grad_ref, mom_ref, out_ref, mom_out_ref,
+            *, lr: float, beta: float, deg: int):
+    g = grad_ref[...].astype(jnp.float32)
+    m_new = beta * mom_ref[...].astype(jnp.float32) + g
+    local = theta_ref[...].astype(jnp.float32) - lr * m_new
+    acc = w_ref[0] * local
+    for i in range(deg):
+        acc += w_ref[i + 1] * nbr_ref[i].astype(jnp.float32)
+    out_ref[...] = acc.astype(out_ref.dtype)
+    mom_out_ref[...] = m_new
+
+
+@functools.partial(jax.jit, static_argnames=("lr", "beta", "block", "interpret"))
+def gossip_update(
+    theta: jax.Array,      # (P,)
+    neighbors: jax.Array,  # (deg, P)
+    weights: jax.Array,    # (deg + 1,) [self, n_1..n_deg]
+    grad: jax.Array,       # (P,)
+    momentum: jax.Array,   # (P,) float32
+    *,
+    lr: float,
+    beta: float,
+    block: int = 1024,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (theta', m')."""
+    (p,) = theta.shape
+    deg = neighbors.shape[0]
+    block = min(block, p)
+    if p % block:
+        raise ValueError(f"param length {p} must tile by block {block}")
+    grid = (p // block,)
+    out, m_out = pl.pallas_call(
+        functools.partial(_kernel, lr=lr, beta=beta, deg=deg),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),          # weights
+            pl.BlockSpec((block,), lambda i: (i,)),          # theta
+            pl.BlockSpec((deg, block), lambda i: (0, i)),    # neighbors
+            pl.BlockSpec((block,), lambda i: (i,)),          # grad
+            pl.BlockSpec((block,), lambda i: (i,)),          # momentum
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p,), theta.dtype),
+            jax.ShapeDtypeStruct((p,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(weights.astype(jnp.float32), theta, neighbors, grad, momentum)
+    return out, m_out

@@ -1,0 +1,44 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True on non-TPU backends (this container is
+CPU-only; interpret mode executes the kernel bodies exactly, so tests are
+bit-meaningful) and False on TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.gossip_update import gossip_update as _gossip
+from repro.kernels.stats import l2_norms as _l2
+
+__all__ = ["flash_attention", "gossip_update", "l2_norms", "default_interpret"]
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, block_q=128, block_k=128,
+                    interpret=None):
+    """(B, H, Sq, D) x (B, KV, Sk, D)² -> (B, H, Sq, D)."""
+    itp = default_interpret() if interpret is None else interpret
+    return _flash(
+        q, k, v, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=itp,
+    )
+
+
+def gossip_update(theta, neighbors, weights, grad, momentum, *, lr, beta,
+                  block=1024, interpret=None):
+    itp = default_interpret() if interpret is None else interpret
+    return _gossip(
+        theta, neighbors, weights, grad, momentum,
+        lr=lr, beta=beta, block=block, interpret=itp,
+    )
+
+
+def l2_norms(x, *, block=2048, interpret=None):
+    itp = default_interpret() if interpret is None else interpret
+    return _l2(x, block=block, interpret=itp)

@@ -1,0 +1,429 @@
+"""SPMD decentralized training engine (the production path).
+
+The train step is a ``jax.shard_map`` manual over the *gossip axes* only;
+the ``model`` axis stays a GSPMD auto axis, so tensor/expert parallelism
+inside a node is driven purely by the parameter in_shardings.  Global state
+is the gossip-stacked tree (leaves ``(G, ...)`` sharded over the gossip
+axes); inside the body each node sees its own replica.
+
+Per iteration (paper §2.1 order):
+  1. local forward/backward (optionally grad-accumulated over microbatches)
+  2. C_complete: ``pmean`` gradients over the gossip axes (all-reduce)
+     D_*:        local optimizer update, then gossip parameter averaging
+                 (``mix_ppermute`` schedule, or the paper-faithful dense
+                 all-gather mixing with ``mixing="dense"``)
+  3. optional DBench probe: per-leaf L2 norms *before* mixing
+
+Ada is realized by compiling one executable per distinct coordination
+number (a handful per run — see ``AdaSchedule.distinct_graphs``) and
+switching executables at epoch boundaries: graph adaptation costs zero
+mid-step recompiles and zero host sync.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core import dbench
+from repro.core.dsgd import Topology
+from repro.core.graphs import CommGraph
+from repro.core.mixing import mix_ppermute
+from repro.launch import sharding as shd
+from repro.launch.mesh import gossip_axes_for, gossip_size
+from repro.models import transformer as tfm
+from repro.models.common import abstract_params, spec_tree
+from repro.optim.sgd import Optimizer
+
+PyTree = Any
+
+__all__ = ["SPMDTrainer", "TrainState"]
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: PyTree
+    opt_state: PyTree
+    step: int = 0
+
+
+def _mix_dense_allgather(new_p: PyTree, graph: CommGraph, axes) -> PyTree:
+    """Paper-faithful dense mixing: gather all replicas, multiply by W-row.
+
+    Costs an all-gather of the full parameter tree over the gossip axes —
+    kept as the *faithful baseline* for §Perf (the paper mixes with a dense
+    adjacency matrix; sparsity-aware schedules are our optimization).
+    """
+    w = jnp.asarray(graph.mixing_matrix(), jnp.float32)
+    idx = jax.lax.axis_index(axes)
+    row = jax.lax.dynamic_slice_in_dim(w, idx, 1, 0)[0]  # (G,)
+
+    def _mix(x):
+        g = jax.lax.all_gather(x.astype(jnp.float32), axes, axis=0, tiled=False)
+        return jnp.einsum("g...,g->...", g, row).astype(x.dtype)
+
+    return jax.tree.map(_mix, new_p)
+
+
+class SPMDTrainer:
+    """Builds and runs the sharded train step for one (arch × mesh × topology)."""
+
+    def __init__(
+        self,
+        cfg,
+        mesh: jax.sharding.Mesh,
+        topology: Topology,
+        optimizer: Optimizer,
+        *,
+        loss_fn: Optional[Callable] = None,
+        accum_steps: int = 1,
+        collect_norms: bool = False,
+        mixing: str = "ppermute",  # ppermute | dense
+        mix_every: int = 1,
+        donate: bool = True,
+    ):
+        """mix_every: gossip once every H optimizer steps (local-SGD ×
+        decentralized; beyond-paper — the limit of the paper's Obs. 5 that
+        late-stage connectivity is nearly free to drop).  The non-mixing
+        step compiles separately, so the H−1 local steps carry zero gossip
+        collectives."""
+        self.cfg = cfg
+        self.mesh = mesh
+        self.topology = topology
+        self.optimizer = optimizer
+        self.accum_steps = accum_steps
+        self.collect_norms = collect_norms
+        self.mixing = mixing
+        self.mix_every = max(int(mix_every), 1)
+        self.donate = donate
+        self.gossip_axes = gossip_axes_for(cfg.name, mesh)
+        self.g = gossip_size(mesh, self.gossip_axes)
+        if topology.n_nodes != self.g:
+            raise ValueError(
+                f"topology has {topology.n_nodes} nodes but mesh gossip axes "
+                f"{self.gossip_axes} give {self.g}"
+            )
+        tp = mesh.shape.get("model", 1)
+        self.defs = tfm.model_defs(cfg, tp_size=tp)
+        self.loss_fn = loss_fn or (lambda p, b: tfm.loss_fn(p, cfg, b))
+        self._step_cache: dict[Any, Any] = {}
+        self._build_shardings()
+
+    # -- shardings -----------------------------------------------------------
+    def _build_shardings(self):
+        stacked = self.g > 1
+        p_abs = abstract_params(self.defs)
+        p_specs = spec_tree(self.defs)
+        o_abs = jax.eval_shape(self.optimizer.init, p_abs)
+        o_specs = self.optimizer.state_specs(p_specs)
+        if stacked:
+            p_abs = shd.stack_abstract(p_abs, self.g)
+            o_abs = shd.stack_abstract(o_abs, self.g)
+        kw = dict(stacked=stacked, fsdp=not stacked)
+        self.param_shardings = shd.param_shardings(
+            p_abs, p_specs, self.mesh, self.gossip_axes, **kw
+        )
+        self.opt_shardings = shd.param_shardings(
+            o_abs, o_specs, self.mesh, self.gossip_axes, **kw
+        )
+        self.abstract_state = (p_abs, o_abs)
+
+    def batch_shardings(self, batch_like: PyTree) -> PyTree:
+        return jax.tree.map(
+            lambda l: shd.batch_sharding(
+                self.mesh, self.gossip_axes, np.ndim(l) if not hasattr(l, "shape") else len(l.shape),
+                stacked=self.g > 1,
+            ),
+            batch_like,
+        )
+
+    # -- state init ------------------------------------------------------------
+    def init_state(self, key: jax.Array) -> TrainState:
+        """Identical replicas on every node (paper §2.2)."""
+        tp = self.mesh.shape.get("model", 1)
+
+        def _init(k):
+            p = tfm.init_model(self.cfg, k, tp_size=tp)
+            o = self.optimizer.init(p)
+            if self.g > 1:
+                p, o = jax.tree.map(
+                    lambda x: jnp.broadcast_to(x[None], (self.g,) + x.shape), (p, o)
+                )
+            return p, o
+
+        with jax.set_mesh(self.mesh):
+            p, o = jax.jit(
+                _init, out_shardings=(self.param_shardings, self.opt_shardings)
+            )(key)
+        return TrainState(p, o, 0)
+
+    # -- the node-level step -----------------------------------------------------
+    def _node_step(self, graph: Optional[CommGraph]):
+        topo = self.topology
+        opt = self.optimizer
+        accum = self.accum_steps
+        axes = self.gossip_axes
+
+        def grads_of(params, batch):
+            if accum == 1:
+                return jax.value_and_grad(self.loss_fn)(params, batch)
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]), batch
+            )
+
+            def acc_body(carry, mb):
+                l, g = jax.value_and_grad(self.loss_fn)(params, mb)
+                return (
+                    carry[0] + l / accum,
+                    jax.tree.map(lambda a, b: a + b / accum, carry[1], g),
+                ), None
+
+            zero = (
+                jnp.zeros((), jnp.float32),
+                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            )
+            (loss, grads), _ = jax.lax.scan(acc_body, zero, micro)
+            return loss, grads
+
+        def node_step(params_st, opt_st, batch_st, lr):
+            squeeze = self.g > 1
+            params = jax.tree.map(lambda x: x[0], params_st) if squeeze else params_st
+            opt_state = jax.tree.map(lambda x: x[0], opt_st) if squeeze else opt_st
+            batch = jax.tree.map(lambda x: x[0], batch_st) if squeeze else batch_st
+
+            loss, grads = grads_of(params, batch)
+            norms = (
+                dbench.param_l2_norms(params)
+                if self.collect_norms
+                else jnp.zeros((0,), jnp.float32)
+            )
+
+            if topo.centralized and self.g > 1:
+                grads = jax.tree.map(lambda g: jax.lax.pmean(g, axes), grads)
+            if topo.mix_order == "pre" and graph is not None and self.g > 1:
+                params = self._mix(params, graph)
+            new_p, new_o = opt.update(grads, opt_state, params, lr)
+            if topo.mix_order == "post" and graph is not None and self.g > 1:
+                new_p = self._mix(new_p, graph)
+
+            if squeeze:
+                new_p = jax.tree.map(lambda x: x[None], new_p)
+                new_o = jax.tree.map(lambda x: x[None], new_o)
+                loss = loss[None]
+                norms = norms[None]
+            return new_p, new_o, loss, norms
+
+        return node_step
+
+    def _mix(self, params, graph):
+        if self.mixing == "dense":
+            return _mix_dense_allgather(params, graph, self.gossip_axes)
+        return mix_ppermute(params, graph, self.gossip_axes)
+
+    # -- jitted step per graph ------------------------------------------------------
+    def step_fn(self, epoch: int = 0, batch_abstract: Optional[PyTree] = None,
+                *, mix: bool = True):
+        graph = self.topology.graph_at(epoch) if mix else None
+        if not mix and self.topology.centralized:
+            raise ValueError("mix_every > 1 is a decentralized-only feature")
+        key = None if graph is None else (graph.name, graph.offsets)
+        if key in self._step_cache:
+            return self._step_cache[key]
+
+        node_step = self._node_step(graph)
+        gspec = P(self.gossip_axes) if self.gossip_axes else P()
+        if self.g == 1:
+            fn = jax.jit(node_step, donate_argnums=(0, 1) if self.donate else ())
+            self._step_cache[key] = fn
+            return fn
+        lead = lambda nd: P(self.gossip_axes, *([None] * nd))
+        in_specs = (
+            jax.tree.map(lambda l: lead(len(l.shape) - 1), self.abstract_state[0]),
+            jax.tree.map(lambda l: lead(len(l.shape) - 1), self.abstract_state[1]),
+        )
+
+        def build(batch_tree):
+            batch_specs = jax.tree.map(
+                lambda x: lead(len(x.shape) - 1), batch_tree
+            )
+            mapped = jax.shard_map(
+                node_step,
+                mesh=self.mesh,
+                in_specs=(in_specs[0], in_specs[1], batch_specs, P()),
+                out_specs=(in_specs[0], in_specs[1], gspec, gspec),
+                axis_names=set(self.gossip_axes),
+                check_vma=False,
+            )
+            return jax.jit(
+                mapped,
+                in_shardings=(
+                    self.param_shardings,
+                    self.opt_shardings,
+                    jax.tree.map(
+                        lambda x: shd.batch_sharding(
+                            self.mesh, self.gossip_axes, len(x.shape), stacked=True
+                        ),
+                        batch_tree,
+                    ),
+                    NamedSharding(self.mesh, P()),
+                ),
+                out_shardings=(
+                    self.param_shardings,
+                    self.opt_shardings,
+                    NamedSharding(self.mesh, gspec),
+                    NamedSharding(self.mesh, gspec),
+                ),
+                donate_argnums=(0, 1) if self.donate else (),
+            )
+
+        class _LazyStep:
+            def __init__(self, build_):
+                self._build = build_
+                self._fn = None
+
+            def __call__(self, params, opt_state, batch, lr):
+                if self._fn is None:
+                    self._fn = self._build(batch)
+                return self._fn(params, opt_state, batch, lr)
+
+            def lower(self, params, opt_state, batch, lr):
+                return self._build(batch).lower(params, opt_state, batch, lr)
+
+        step = _LazyStep(build)
+        self._step_cache[key] = step
+        return step
+
+    # -- public API ------------------------------------------------------------------
+    def train_step(self, state: TrainState, batch: PyTree, lr: float, *, epoch: int = 0):
+        mix = (state.step + 1) % self.mix_every == 0
+        fn = self.step_fn(epoch, mix=mix or self.topology.centralized)
+        with jax.set_mesh(self.mesh):
+            p, o, loss, norms = fn(
+                state.params, state.opt_state, batch, jnp.float32(lr)
+            )
+        return TrainState(p, o, state.step + 1), loss, norms
+
+    def lower_step(self, shape, *, epoch: int = 0):
+        """Abstract lowering for the dry-run: ShapeDtypeStructs only."""
+        from repro.configs.base import input_specs
+
+        batch = input_specs(self.cfg, shape, n_nodes=max(self.g, 1))
+        if self.g == 1:
+            # flat batch for the degenerate placement
+            batch = {
+                k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in batch.items()
+            }
+        fn = self.step_fn(epoch)
+        p_abs, o_abs = self.abstract_state
+        lr = jax.ShapeDtypeStruct((), jnp.float32)
+        with jax.set_mesh(self.mesh):
+            if self.g == 1:
+                lowered = jax.jit(
+                    self._node_step(self.topology.graph_at(epoch)),
+                    in_shardings=(
+                        self.param_shardings,
+                        self.opt_shardings,
+                        jax.tree.map(
+                            lambda x: shd.batch_sharding(
+                                self.mesh, (), len(x.shape), stacked=False
+                            ),
+                            batch,
+                        ),
+                        NamedSharding(self.mesh, P()),
+                    ),
+                    out_shardings=(
+                        self.param_shardings,
+                        self.opt_shardings,
+                        NamedSharding(self.mesh, P()),
+                        NamedSharding(self.mesh, P()),
+                    ),
+                ).lower(p_abs, o_abs, batch, lr)
+            else:
+                lowered = fn.lower(p_abs, o_abs, batch, lr)
+        return lowered
+
+
+# ---------------------------------------------------------------------------
+# CLI launcher:  PYTHONPATH=src python -m repro.launch.train --arch granite-8b
+# ---------------------------------------------------------------------------
+
+def main() -> None:
+    import argparse
+    import time
+
+    ap = argparse.ArgumentParser(description="decentralized training launcher")
+    ap.add_argument("--arch", default="granite-8b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the CPU-scale reduced config (default on CPU)")
+    ap.add_argument("--topology", default="d_ada")
+    ap.add_argument("--mixing", default="ppermute", choices=["ppermute", "dense"])
+    ap.add_argument("--mix-every", type=int, default=1)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--steps-per-epoch", type=int, default=10)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--per-node-batch", type=int, default=2)
+    ap.add_argument("--lr", type=float, default=0.1)
+    ap.add_argument("--lr-scaling", default="sqrt", choices=["none", "linear", "sqrt"])
+    ap.add_argument("--optimizer", default="sgd", choices=["sgd", "adamw", "lars"])
+    ap.add_argument("--mesh", default="2,2", help="data,model (CPU uses host devices)")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.core.dsgd import make_topology
+    from repro.data import SyntheticLM
+    from repro.launch.mesh import make_mesh
+    from repro.optim.schedules import lr_scale
+    from repro.optim.sgd import get_optimizer
+
+    shape = tuple(int(x) for x in args.mesh.split(","))
+    if len(jax.devices()) < shape[0] * shape[1]:
+        raise SystemExit(
+            f"mesh {shape} needs {shape[0]*shape[1]} devices but only "
+            f"{len(jax.devices())} present — set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={shape[0]*shape[1]}"
+        )
+    mesh = make_mesh(shape, ("data", "model"))
+    cfg = get_config(args.arch + ("-reduced" if args.reduced or jax.default_backend() == "cpu" else ""))
+    import dataclasses
+
+    cfg = dataclasses.replace(cfg, name=args.arch)  # keep gossip placement
+    g = shape[0]
+    topo = make_topology(args.topology, g)
+    trainer = SPMDTrainer(
+        cfg, mesh, topo, get_optimizer(args.optimizer), collect_norms=True,
+        mixing=args.mixing, mix_every=args.mix_every, donate=False,
+    )
+    print(topo.describe(), "| mesh", dict(mesh.shape), "| mixing", args.mixing)
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    src = SyntheticLM(vocab=cfg.vocab, seq_len=args.seq, seed=0)
+    scale = lr_scale(
+        args.lr_scaling, global_batch=g * args.per_node_batch,
+        base_batch=max(g * args.per_node_batch, 1), graph_degree=topo.degree_at(0),
+    )
+    t0 = time.time()
+    for t in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in src.stacked(g, t, args.per_node_batch).items()}
+        epoch = t // args.steps_per_epoch
+        state, loss, norms = trainer.train_step(state, batch, args.lr * scale, epoch=epoch)
+        if t % 5 == 0 or t == args.steps - 1:
+            print(f"step {t:4d} k={topo.degree_at(epoch)} loss={float(loss.mean()):.4f} "
+                  f"spread={float(loss.max() - loss.min()):.4f}")
+        if args.ckpt_dir and args.ckpt_every and (t + 1) % args.ckpt_every == 0:
+            from repro.checkpoint import save_checkpoint
+
+            save_checkpoint(args.ckpt_dir, t + 1, {"p": state.params, "o": state.opt_state})
+    print(f"{args.steps} steps in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

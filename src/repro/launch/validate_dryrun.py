@@ -1,0 +1,70 @@
+"""Validate dry-run records against the analytic FLOP model; list outliers.
+
+A record is suspect when its loop-aware ``hlo.dot_flops`` is far below the
+6·N_active·D model (trip counts not applied — e.g. records written by a
+stale worker) or zero where compute must exist.  Prints suspect
+(arch, shape, mesh) triples; ``--fix`` deletes them from the artifact so a
+``--skip-existing`` re-run regenerates exactly those.
+
+  PYTHONPATH=src python -m repro.launch.validate_dryrun --in dryrun_results_v2.json [--fix]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs.base import SHAPES
+from repro.launch.roofline import model_flops_per_device
+from repro.configs import get_config
+
+
+def is_suspect(rec: dict) -> str | None:
+    if "error" in rec:
+        return "error"
+    hlo = rec.get("hlo")
+    if not hlo:
+        return "no-hlo"
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    mflops = model_flops_per_device(
+        cfg, shape, rec["mesh_shape"], rec.get("gossip_nodes", 1)
+    )
+    dot = hlo.get("dot_flops", 0.0)
+    if dot <= 0:
+        return "zero-dot-flops"
+    # allow [0.3, 6]x of analytic: remat adds ~1.33x, attention quadratic adds
+    # more at long context, capacity factors ~1.25x; a missing layer-loop
+    # multiplier shows up as ~L-fold (>= 20x) deficit.
+    ratio = dot / mflops
+    if ratio < 0.3:
+        return f"dot/model={ratio:.3f} (trip counts likely missing)"
+    if ratio > 8.0:
+        return f"dot/model={ratio:.1f} (double counting?)"
+    return None
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="inp", default="dryrun_results_v2.json")
+    ap.add_argument("--fix", action="store_true")
+    args = ap.parse_args()
+    with open(args.inp) as f:
+        records = json.load(f)
+    keep, bad = [], []
+    for r in records:
+        why = is_suspect(r)
+        if why:
+            bad.append((r["arch"], r["shape"], r["mesh"], why))
+        else:
+            keep.append(r)
+    for arch, shape, mesh, why in bad:
+        print(f"SUSPECT {arch:24s} {shape:12s} {mesh:6s} {why}")
+    print(f"{len(keep)} ok, {len(bad)} suspect")
+    if args.fix and bad:
+        with open(args.inp, "w") as f:
+            json.dump(keep, f, indent=1)
+        print(f"removed {len(bad)} records from {args.inp}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,171 @@
+"""Shared model machinery: param definitions (+ partition specs), norms, RoPE.
+
+Parameters are declared as trees of ``ParamDef`` (shape, init, logical
+partition spec) so that a single declaration produces both the materialized
+weights and the mesh shardings used by ``launch/sharding.py``.  Partition
+specs here name only the ``model`` axis; the launcher prepends the gossip
+axes for the stacked-replica layout.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+__all__ = [
+    "ParamDef",
+    "init_params",
+    "spec_tree",
+    "param_count",
+    "rms_norm",
+    "layer_norm",
+    "rope",
+    "apply_rope",
+    "he_normal",
+    "normal_init",
+    "zeros_init",
+    "ones_init",
+]
+
+
+# ---------------------------------------------------------------------------
+# Param declaration
+# ---------------------------------------------------------------------------
+
+Initializer = Callable[[jax.Array, tuple, Any], jax.Array]
+
+
+def normal_init(stddev: float = 0.02) -> Initializer:
+    return lambda key, shape, dtype: stddev * jax.random.normal(key, shape, dtype)
+
+
+def he_normal(fan_in_axes: tuple[int, ...] = (-2,)) -> Initializer:
+    def init(key, shape, dtype):
+        fan_in = 1
+        for a in fan_in_axes:
+            fan_in *= shape[a]
+        std = math.sqrt(2.0 / max(fan_in, 1))
+        return std * jax.random.normal(key, shape, dtype)
+
+    return init
+
+
+def zeros_init() -> Initializer:
+    return lambda key, shape, dtype: jnp.zeros(shape, dtype)
+
+
+def ones_init() -> Initializer:
+    return lambda key, shape, dtype: jnp.ones(shape, dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    """Declaration of one weight tensor.
+
+    spec: logical partition per dim — entries are None or mesh-axis names
+      (only "model" is used at the module level).  len(spec) == len(shape).
+    """
+
+    shape: tuple[int, ...]
+    init: Initializer = normal_init()
+    spec: tuple[Optional[str], ...] = ()
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        if not self.spec:
+            object.__setattr__(self, "spec", (None,) * len(self.shape))
+        if len(self.spec) != len(self.shape):
+            raise ValueError(f"spec {self.spec} rank != shape {self.shape}")
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_params(defs: PyTree, key: jax.Array, dtype=None) -> PyTree:
+    """Materialize a ParamDef tree into arrays (one fresh key per leaf)."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=_is_def)
+    keys = jax.random.split(key, len(leaves))
+    vals = [
+        d.init(k, d.shape, dtype if dtype is not None else d.dtype)
+        for d, k in zip(leaves, keys)
+    ]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(defs: PyTree, dtype=None) -> PyTree:
+    """ShapeDtypeStruct tree (for dry-run lowering without allocation)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(
+            d.shape, dtype if dtype is not None else d.dtype
+        ),
+        defs,
+        is_leaf=_is_def,
+    )
+
+
+def spec_tree(defs: PyTree) -> PyTree:
+    """Extract the logical partition-spec tree (tuples per leaf)."""
+    return jax.tree.map(lambda d: d.spec, defs, is_leaf=_is_def)
+
+
+def param_count(tree: PyTree) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=_is_def)
+    total = 0
+    for x in leaves:
+        shape = x.shape if not isinstance(x, ParamDef) else x.shape
+        n = 1
+        for s in shape:
+            n *= s
+        total += n
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Normalization
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(
+    x: jax.Array, gamma: jax.Array, beta: jax.Array, eps: float = 1e-5
+) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope(positions: jax.Array, d_head: int, theta: float = 10000.0):
+    """(sin, cos) tables for ``positions`` (any leading shape) -> (..., d_head/2)."""
+    half = d_head // 2
+    freqs = 1.0 / (
+        theta ** (jnp.arange(0, half, dtype=jnp.float32) / half)
+    )
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(angles), jnp.cos(angles)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """Rotate (..., S, H, Dh) by per-position (.., S, Dh/2) tables."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    sin = sin[..., None, :]  # broadcast over heads
+    cos = cos[..., None, :]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)

@@ -1,0 +1,140 @@
+"""Mamba2 (SSD) mixer block — the recurrent half of Zamba2 (arXiv:2411.15242).
+
+Structure: RMSNorm → [z | x | B | C | dt] projections → short causal
+depthwise conv on x → SSD recurrence (scalar-per-head decay) → gated RMSNorm
+→ out projection, with residual.  n_groups = 1 (B/C shared across heads).
+The reference Mamba2 also convolves B and C; we convolve x only (B/C are
+N=64-dim — negligible compute; noted in DESIGN.md).
+
+Decode state: (h (B, H, P, N), conv tail (B, K-1, d_inner)).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (
+    ParamDef,
+    he_normal,
+    normal_init,
+    ones_init,
+    rms_norm,
+    zeros_init,
+)
+from repro.models.recurrence import ssd_chunked, ssd_step
+
+__all__ = ["mamba_block_defs", "apply_mamba_block", "mamba_block_decode", "MambaState"]
+
+_CONV_K = 4
+_HEAD_P = 64  # channels per SSD head
+
+
+class MambaState(NamedTuple):
+    h: jax.Array     # (B, H, P, N) float32
+    conv: jax.Array  # (B, K-1, d_inner)
+
+    @classmethod
+    def empty(cls, batch, n_heads, d_state, d_inner, dtype=jnp.float32):
+        return cls(
+            h=jnp.zeros((batch, n_heads, _HEAD_P, d_state), jnp.float32),
+            conv=jnp.zeros((batch, _CONV_K - 1, d_inner), dtype),
+        )
+
+
+def mamba_n_heads(d_model: int, expand: int = 2) -> int:
+    return d_model * expand // _HEAD_P
+
+
+def mamba_block_defs(d_model: int, d_state: int, *, expand: int = 2, dtype=jnp.float32):
+    d_inner = d_model * expand
+    h = d_inner // _HEAD_P
+
+    def a_init(key, shape, _dtype):
+        return jnp.log(jax.random.uniform(key, shape, jnp.float32, 1.0, 16.0)).astype(_dtype)
+
+    return {
+        "norm_g": ParamDef((d_model,), ones_init(), (None,), dtype),
+        "w_z": ParamDef((d_model, d_inner), he_normal((-2,)), (None, "model"), dtype),
+        "w_x": ParamDef((d_model, d_inner), he_normal((-2,)), (None, "model"), dtype),
+        "w_b": ParamDef((d_model, d_state), he_normal((-2,)), (None, None), dtype),
+        "w_c": ParamDef((d_model, d_state), he_normal((-2,)), (None, None), dtype),
+        "w_dt": ParamDef((d_model, h), he_normal((-2,)), (None, None), dtype),
+        "dt_bias": ParamDef((h,), zeros_init(), (None,), dtype),
+        "conv_w": ParamDef((_CONV_K, d_inner), normal_init(0.2), (None, "model"), dtype),
+        "conv_b": ParamDef((d_inner,), zeros_init(), ("model",), dtype),
+        "a_log": ParamDef((h,), a_init, (None,), jnp.float32),
+        "d_skip": ParamDef((h,), ones_init(), (None,), jnp.float32),
+        "gn_g": ParamDef((d_inner,), ones_init(), ("model",), dtype),
+        "w_out": ParamDef((d_inner, d_model), he_normal((-2,)), ("model", None), dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array, tail: jax.Array):
+    """Depthwise causal conv, kernel K, via shifts.
+
+    x: (B, S, C); w: (K, C); tail: (B, K-1, C) — inputs preceding x.
+    Returns (y (B, S, C), new_tail (B, K-1, C)).
+    """
+    k = w.shape[0]
+    ext = jnp.concatenate([tail, x], axis=1)  # (B, S+K-1, C)
+    s = x.shape[1]
+    y = sum(ext[:, i : i + s] * w[i] for i in range(k)) + b
+    return y, ext[:, -(k - 1) :] if k > 1 else tail
+
+
+def apply_mamba_block(
+    params, x: jax.Array, state: MambaState, *, d_state: int, chunk: int = 64
+) -> tuple[jax.Array, MambaState]:
+    """x: (B, S, D) residual stream."""
+    bsz, s, d = x.shape
+    xn = rms_norm(x, params["norm_g"])
+
+    z = xn @ params["w_z"]                      # (B, S, d_inner)
+    xi = xn @ params["w_x"]
+    b_in = xn @ params["w_b"]                   # (B, S, N)
+    c_in = xn @ params["w_c"]
+    dt = jax.nn.softplus(xn @ params["w_dt"] + params["dt_bias"])  # (B, S, H)
+
+    xi, conv_tail = _causal_conv(xi, params["conv_w"], params["conv_b"], state.conv)
+    xi = jax.nn.silu(xi)
+
+    h_heads = xi.shape[-1] // _HEAD_P
+    xh = xi.reshape(bsz, s, h_heads, _HEAD_P)
+    y, h_new = ssd_chunked(
+        xh, dt, params["a_log"], b_in, c_in, params["d_skip"], state.h, chunk=chunk
+    )
+    y = y.reshape(bsz, s, -1)
+    y = rms_norm(y * jax.nn.silu(z), params["gn_g"])
+    out = x + y @ params["w_out"]
+    return out, MambaState(h=h_new, conv=conv_tail)
+
+
+def mamba_block_decode(
+    params, x: jax.Array, state: MambaState, *, d_state: int
+) -> tuple[jax.Array, MambaState]:
+    """Single-token step. x: (B, D)."""
+    bsz, d = x.shape
+    xn = rms_norm(x[:, None], params["norm_g"])[:, 0]
+
+    z = xn @ params["w_z"]
+    xi = xn @ params["w_x"]
+    b_in = xn @ params["w_b"]
+    c_in = xn @ params["w_c"]
+    dt = jax.nn.softplus(xn @ params["w_dt"] + params["dt_bias"])
+
+    xi1, new_tail = _causal_conv(
+        xi[:, None], params["conv_w"], params["conv_b"], state.conv
+    )
+    xi1 = jax.nn.silu(xi1[:, 0])
+
+    h_heads = xi1.shape[-1] // _HEAD_P
+    xh = xi1.reshape(bsz, h_heads, _HEAD_P)
+    y, h_new = ssd_step(
+        xh, dt, params["a_log"], b_in, c_in, params["d_skip"], state.h
+    )
+    y = y.reshape(bsz, -1)
+    y = rms_norm((y * jax.nn.silu(z))[:, None], params["gn_g"])[:, 0]
+    out = x + y @ params["w_out"]
+    return out, MambaState(h=h_new, conv=new_tail)

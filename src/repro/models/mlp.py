@@ -1,0 +1,36 @@
+"""Dense feed-forward blocks (gated SiLU / GELU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamDef, he_normal
+
+__all__ = ["mlp_defs", "apply_mlp"]
+
+
+def mlp_defs(d_model: int, d_ff: int, *, gated: bool = True, dtype=jnp.float32):
+    """Column-parallel up-projections, row-parallel down-projection."""
+    defs = {
+        "w_up": ParamDef(
+            (d_model, d_ff), he_normal((-2,)), (None, "model"), dtype
+        ),
+        "w_down": ParamDef(
+            (d_ff, d_model), he_normal((-2,)), ("model", None), dtype
+        ),
+    }
+    if gated:
+        defs["w_gate"] = ParamDef(
+            (d_model, d_ff), he_normal((-2,)), (None, "model"), dtype
+        )
+    return defs
+
+
+def apply_mlp(params, x: jax.Array, *, act: str = "silu") -> jax.Array:
+    up = jnp.einsum("bsd,df->bsf", x, params["w_up"])
+    if "w_gate" in params:
+        gate = jnp.einsum("bsd,df->bsf", x, params["w_gate"])
+        h = jax.nn.silu(gate) * up if act == "silu" else jax.nn.gelu(gate) * up
+    else:
+        h = jax.nn.silu(up) if act == "silu" else jax.nn.gelu(up)
+    return jnp.einsum("bsf,fd->bsd", h, params["w_down"])

@@ -1,0 +1,258 @@
+"""Mixture-of-Experts with top-k routing and capacity-based dispatch.
+
+Dispatch uses the sort-free scatter/gather scheme (no (T, E, C) one-hot
+einsums, which are infeasible at 384 experts):
+
+  1. router: top-k expert ids + renormalized softmax weights per token
+  2. position-in-expert via a stable argsort over the flat (T*k,) expert
+     assignment; tokens beyond expert capacity C are *dropped* (standard
+     capacity-factor semantics)
+  3. scatter tokens into an (E, C, D) buffer (experts sharded over the
+     ``model`` mesh axis = expert parallelism), batched expert GEMMs,
+     gather back, weighted combine.
+
+The router's load-balance auxiliary loss (Shazeer-style f·p) is **node-local**
+under decentralized training — router statistics are never globally averaged,
+mirroring how every other gradient signal stays local (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamDef, he_normal, normal_init
+
+__all__ = ["moe_defs", "apply_moe"]
+
+
+def moe_defs(
+    d_model: int,
+    d_ff: int,
+    n_experts: int,
+    *,
+    n_shared: int = 0,
+    shard_ff: bool = False,
+    dtype=jnp.float32,
+):
+    """shard_ff: additionally shard the expert d_ff dim over the ``data``
+    mesh axis (2-level expert TP).  Up/gate become column-parallel and
+    down-proj row-parallel over ``data`` — no per-layer expert weight
+    gathers, at the cost of one (E_local, C, D) partial-sum all-reduce.
+    Used for 1T-scale single-replica placements (kimi-k2, G=1)."""
+    up_spec = ("model", None, "data") if shard_ff else ("model", None, None)
+    down_spec = ("model", "data", None) if shard_ff else ("model", None, None)
+    defs = {
+        "router": ParamDef(
+            (d_model, n_experts), normal_init(0.02), (None, None), dtype
+        ),
+        "w_gate": ParamDef(
+            (n_experts, d_model, d_ff), he_normal((-2,)), up_spec, dtype
+        ),
+        "w_up": ParamDef(
+            (n_experts, d_model, d_ff), he_normal((-2,)), up_spec, dtype
+        ),
+        "w_down": ParamDef(
+            (n_experts, d_ff, d_model), he_normal((-2,)), down_spec, dtype
+        ),
+    }
+    if n_shared:
+        defs["shared"] = {
+            "w_gate": ParamDef(
+                (d_model, n_shared * d_ff), he_normal((-2,)), (None, "model"), dtype
+            ),
+            "w_up": ParamDef(
+                (d_model, n_shared * d_ff), he_normal((-2,)), (None, "model"), dtype
+            ),
+            "w_down": ParamDef(
+                (n_shared * d_ff, d_model), he_normal((-2,)), ("model", None), dtype
+            ),
+        }
+    return defs
+
+
+def _top_k_router(logits: jax.Array, k: int):
+    """-> (weights (T, k) renormalized softmax, ids (T, k))."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_p, top_ids = jax.lax.top_k(probs, k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+    return top_p, top_ids
+
+
+def apply_moe(
+    params,
+    x: jax.Array,
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    capacity: Optional[int] = None,
+    buf_constraint: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (output (B, S, D), aux load-balance loss scalar)."""
+    b, s, d = x.shape
+    e = params["router"].shape[1]
+    t = b * s
+    xt = x.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", xt, params["router"])
+    weights, ids = _top_k_router(logits, top_k)  # (T, k)
+
+    # Load-balance aux loss (node-local): E * sum_e f_e * p_e
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    f = jnp.zeros((e,), jnp.float32).at[ids.reshape(-1)].add(1.0) / (t * top_k)
+    p_mean = probs.mean(axis=0)
+    aux = e * jnp.sum(f * p_mean)
+
+    if capacity is None:
+        capacity = int(max(top_k * t * capacity_factor / e, 4))
+
+    # --- position-in-expert via stable sort over flat assignments ----------
+    flat_e = ids.reshape(-1)  # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    # start offset of each expert group inside the sorted list
+    group_start = jnp.searchsorted(sorted_e, jnp.arange(e), side="left")
+    pos_sorted = jnp.arange(t * top_k) - group_start[sorted_e]
+    keep_sorted = pos_sorted < capacity
+    pos_sorted = jnp.minimum(pos_sorted, capacity - 1)
+
+    token_idx_sorted = order // top_k
+    gathered = xt[token_idx_sorted]  # (T*k, D)
+    gathered = jnp.where(keep_sorted[:, None], gathered, 0.0)
+
+    buf = jnp.zeros((e, capacity, d), x.dtype)
+    buf = buf.at[sorted_e, pos_sorted].add(gathered.astype(x.dtype))
+    if buf_constraint:
+        # pin the dispatch buffer to expert-parallel layout so GSPMD cannot
+        # replicate it ("involuntary full rematerialization" on the scatter)
+        from jax.sharding import PartitionSpec as _P
+
+        buf = jax.lax.with_sharding_constraint(buf, _P("model", None, None))
+
+    # --- expert GEMMs (E sharded over `model`) ------------------------------
+    g = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+    h = jax.nn.silu(g) * u
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+    if buf_constraint:
+        from jax.sharding import PartitionSpec as _P
+
+        out_buf = jax.lax.with_sharding_constraint(out_buf, _P("model", None, None))
+
+    # --- combine -------------------------------------------------------------
+    picked = out_buf[sorted_e, pos_sorted]  # (T*k, D)
+    w_sorted = weights.reshape(-1)[order]
+    picked = picked.astype(jnp.float32) * jnp.where(keep_sorted, w_sorted, 0.0)[:, None]
+    out = (
+        jnp.zeros((t, d), jnp.float32).at[token_idx_sorted].add(picked)
+    ).astype(x.dtype)
+    out = out.reshape(b, s, d)
+
+    if "shared" in params:
+        sh = params["shared"]
+        gate = jnp.einsum("bsd,df->bsf", x, sh["w_gate"])
+        up = jnp.einsum("bsd,df->bsf", x, sh["w_up"])
+        out = out + jnp.einsum("bsf,fd->bsd", jax.nn.silu(gate) * up, sh["w_down"])
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# Manual expert parallelism (explicit collectives; §Perf H2/H4 follow-up)
+# ---------------------------------------------------------------------------
+
+def apply_moe_manual_ep(
+    params,
+    x: jax.Array,
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    capacity: Optional[int] = None,
+    axis: str = "model",
+) -> tuple[jax.Array, jax.Array]:
+    """Expert-parallel MoE with *hand-written* collectives.
+
+    GSPMD's auto-partitioning of the scatter/gather dispatch replicates the
+    (E, C, D) buffers per layer (§Perf H2/H4: the measured collective wall).
+    This variant pins the schedule instead: a nested ``shard_map`` manual
+    over the ``model`` axis — activations replicated, expert weights sharded
+    on E, every device dispatches the full token set to *its own* experts
+    locally and the partial outputs are combined with one ``psum``:
+
+        wire/device/layer = 2·T·D bytes (the psum), deterministically,
+        vs. the (E, C, D) buffer replication GSPMD chooses (~1.3–2.6×
+        more for the assigned MoE shapes, and unpredictable).
+
+    Semantics are identical to ``apply_moe`` (same router, same capacity
+    rule — tested).  Requires E % axis_size == 0.
+    """
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+
+    e = params["router"].shape[1]
+
+    def body(router, w_gate, w_up, w_down, xs):
+        n_shards = jax.lax.axis_size(axis)
+        shard = jax.lax.axis_index(axis)
+        e_local = w_gate.shape[0]
+        b, s, d = xs.shape
+        t = b * s
+        xt = xs.reshape(t, d)
+
+        logits = jnp.einsum("td,de->te", xt, router)
+        weights, ids = _top_k_router(logits, top_k)
+
+        probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+        f = jnp.zeros((e,), jnp.float32).at[ids.reshape(-1)].add(1.0) / (t * top_k)
+        aux = e * jnp.sum(f * probs.mean(axis=0))
+
+        cap = capacity
+        if cap is None:
+            cap = int(max(top_k * t * capacity_factor / e, 4))
+
+        flat_e = ids.reshape(-1)
+        order = jnp.argsort(flat_e, stable=True)
+        sorted_e = flat_e[order]
+        group_start = jnp.searchsorted(sorted_e, jnp.arange(e), side="left")
+        pos_sorted = jnp.arange(t * top_k) - group_start[sorted_e]
+        keep = pos_sorted < cap
+        pos_sorted = jnp.minimum(pos_sorted, cap - 1)
+        token_idx = order // top_k
+
+        # ownership: only my experts land in my local buffer
+        local_e = sorted_e - shard * e_local
+        mine = keep & (local_e >= 0) & (local_e < e_local)
+        local_e = jnp.clip(local_e, 0, e_local - 1)
+
+        gathered = jnp.where(mine[:, None], xt[token_idx], 0.0)
+        buf = jnp.zeros((e_local, cap, d), xs.dtype)
+        buf = buf.at[local_e, pos_sorted].add(gathered.astype(xs.dtype))
+
+        g = jnp.einsum("ecd,edf->ecf", buf, w_gate)
+        u = jnp.einsum("ecd,edf->ecf", buf, w_up)
+        out_buf = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, w_down)
+
+        picked = out_buf[local_e, pos_sorted]
+        w_sorted = weights.reshape(-1)[order]
+        picked = picked.astype(jnp.float32) * jnp.where(mine, w_sorted, 0.0)[:, None]
+        partial = jnp.zeros((t, d), jnp.float32).at[token_idx].add(picked)
+        # NOTE: a bf16 psum would halve this wire, but XLA:CPU's SPMD
+        # partitioner hard-crashes on it at 512 partitions (hlo_instruction
+        # "Invalid binary instruction opcode copy") — kept in f32.
+        out = jax.lax.psum(partial, axis)          # ONE collective per layer
+        return out.reshape(b, s, d).astype(xs.dtype), aux
+
+    out, aux = jax.shard_map(
+        body,
+        in_specs=(P(), P(axis, None, None), P(axis, None, None), P(axis, None, None), P()),
+        out_specs=(P(), P()),
+        axis_names={axis},
+        check_vma=True,
+    )(params["router"], params["w_gate"], params["w_up"], params["w_down"], x)
+
+    if "shared" in params:
+        sh = params["shared"]
+        gate = jnp.einsum("bsd,df->bsf", x, sh["w_gate"])
+        up = jnp.einsum("bsd,df->bsf", x, sh["w_up"])
+        out = out + jnp.einsum("bsf,fd->bsd", jax.nn.silu(gate) * up, sh["w_down"])
+    return out, aux

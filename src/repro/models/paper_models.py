@@ -1,0 +1,136 @@
+"""The paper's own benchmark models, in JAX: a compact ResNet-style CNN
+(CIFAR-class, the ResNet20/DenseNet100 stand-in at CPU-benchmark scale) and
+an LSTM language model (the WikiText2 subject).
+
+These drive the DBench white-box benchmarks (benchmarks/*), reproducing the
+paper's experiment *structure* — image classification + language modeling
+across five SGD implementations — at a scale a CPU can sweep.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamDef, he_normal, init_params, normal_init, ones_init, zeros_init
+
+__all__ = [
+    "mini_resnet_defs", "mini_resnet_apply", "mini_resnet_loss",
+    "lstm_defs", "lstm_apply", "lstm_loss",
+    "synthetic_images",
+]
+
+
+# ---------------------------------------------------------------------------
+# Mini ResNet (image classification)
+# ---------------------------------------------------------------------------
+
+def _conv_def(cin, cout, k=3):
+    return ParamDef((k, k, cin, cout), he_normal((-4, -3, -2)), (None,) * 4)
+
+
+def mini_resnet_defs(channels: int = 16, n_classes: int = 10, depth: int = 2):
+    defs = {"stem": _conv_def(3, channels)}
+    for i in range(depth):
+        defs[f"block{i}"] = {
+            "conv1": _conv_def(channels, channels),
+            "conv2": _conv_def(channels, channels),
+            "g1": ParamDef((channels,), ones_init(), (None,)),
+            "g2": ParamDef((channels,), ones_init(), (None,)),
+        }
+    defs["head"] = ParamDef((channels, n_classes), normal_init(0.05), (None, None))
+    defs["head_b"] = ParamDef((n_classes,), zeros_init(), (None,))
+    return defs
+
+
+def _conv(x, w):
+    return jax.lax.conv_general_dilated(
+        x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+
+
+def _chan_norm(x, g, eps=1e-5):
+    """Per-channel norm over (H, W) — BN's stateless, replica-local cousin
+    (keeps cross-replica stats local, mirroring the paper's per-GPU BN)."""
+    mu = x.mean(axis=(1, 2), keepdims=True)
+    var = x.var(axis=(1, 2), keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g
+
+
+def mini_resnet_apply(params, images):
+    """images: (B, H, W, 3) -> logits (B, n_classes)."""
+    h = jax.nn.relu(_conv(images, params["stem"]))
+    i = 0
+    while f"block{i}" in params:
+        b = params[f"block{i}"]
+        r = jax.nn.relu(_chan_norm(_conv(h, b["conv1"]), b["g1"]))
+        r = _chan_norm(_conv(r, b["conv2"]), b["g2"])
+        h = jax.nn.relu(h + r)
+        i += 1
+    pooled = h.mean(axis=(1, 2))
+    return pooled @ params["head"] + params["head_b"]
+
+
+def mini_resnet_loss(params, batch):
+    logits = mini_resnet_apply(params, batch["images"])
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def synthetic_images(key, n_classes=10, batch=32, size=16, noise=0.6):
+    """Class-conditional Gaussian images: learnable but non-trivial."""
+    kl, kp, kn = jax.random.split(key, 3)
+    labels = jax.random.randint(kl, (batch,), 0, n_classes)
+    protos = jax.random.normal(
+        jax.random.PRNGKey(7), (n_classes, size, size, 3)
+    )  # fixed prototypes
+    imgs = protos[labels] + noise * jax.random.normal(kn, (batch, size, size, 3))
+    return {"images": imgs, "labels": labels}
+
+
+# ---------------------------------------------------------------------------
+# LSTM language model
+# ---------------------------------------------------------------------------
+
+def lstm_defs(vocab: int = 256, d: int = 128):
+    return {
+        "embed": ParamDef((vocab, d), normal_init(0.05), (None, None)),
+        "wx": ParamDef((d, 4 * d), he_normal((-2,)), (None, None)),
+        "wh": ParamDef((d, 4 * d), he_normal((-2,)), (None, None)),
+        "b": ParamDef((4 * d,), zeros_init(), (None,)),
+        "head": ParamDef((d, vocab), normal_init(0.05), (None, None)),
+    }
+
+
+def lstm_apply(params, tokens):
+    """tokens (B, S) -> logits (B, S, V)."""
+    x = jnp.take(params["embed"], tokens, axis=0)  # (B, S, D)
+    b, s, d = x.shape
+    h0 = jnp.zeros((b, d))
+    c0 = jnp.zeros((b, d))
+
+    def cell(carry, xt):
+        h, c = carry
+        z = xt @ params["wx"] + h @ params["wh"] + params["b"]
+        i, f, g, o = jnp.split(z, 4, axis=-1)
+        c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), h
+
+    _, hs = jax.lax.scan(cell, (h0, c0), x.swapaxes(0, 1))
+    return hs.swapaxes(0, 1) @ params["head"]
+
+
+def lstm_loss(params, batch):
+    logits = lstm_apply(params, batch["tokens"])
+    t = batch["targets"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    tgt = jnp.take_along_axis(logp, jnp.maximum(t, 0)[..., None], axis=-1)[..., 0]
+    valid = (t >= 0).astype(jnp.float32)
+    return -jnp.sum(tgt * valid) / jnp.maximum(valid.sum(), 1.0)
+
+
+def lstm_perplexity(params, batch):
+    return jnp.exp(lstm_loss(params, batch))

@@ -1,0 +1,221 @@
+"""Chunked linear recurrences for the SSM/linear-attention families.
+
+Two exact, numerically-safe chunked algorithms (chunk-parallel within a
+chunk, ``lax.scan`` across chunks):
+
+  * ``rwkv_chunked``  — vector (per-channel) decay with bonus term
+        S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+        o_t = r_tᵀ (S_{t-1} + diag(u) k_t v_tᵀ)
+    (RWKV6 "Finch" WKV recurrence; decay w_t is data-dependent.)
+
+  * ``ssd_chunked``   — scalar-per-head decay (Mamba2 SSD)
+        h_t = a_t h_{t-1} + dt_t · x_t B_tᵀ
+        y_t = h_t C_t + D ⊙ x_t       (a_t = exp(dt_t A) ∈ (0,1))
+
+Both express intra-chunk interactions with *pairwise relative decays*
+``exp(la_t - la_s), s ≤ t`` where ``la = cumsum(log decay)``; since log-decays
+are ≤ 0 and s ≤ t, every exponent is ≤ 0 — no overflow at any chunk length
+(this is why we don't use the q·exp(la) / k·exp(-la) factorization, which
+overflows for strongly-decaying channels).
+
+Single-step ``*_step`` variants drive decode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "rwkv_chunked",
+    "rwkv_step",
+    "rwkv_scan_reference",
+    "ssd_chunked",
+    "ssd_step",
+    "ssd_scan_reference",
+]
+
+
+def _chunk(x: jax.Array, c: int) -> jax.Array:
+    """(B, L, ...) -> (n, B, c, ...) — scan-major chunking (L % c == 0)."""
+    b, l = x.shape[:2]
+    return x.reshape(b, l // c, c, *x.shape[2:]).swapaxes(0, 1)
+
+
+def _unchunk(x: jax.Array) -> jax.Array:
+    """(n, B, c, ...) -> (B, L, ...)."""
+    n, b, c = x.shape[:3]
+    return x.swapaxes(0, 1).reshape(b, n * c, *x.shape[3:])
+
+
+# ---------------------------------------------------------------------------
+# RWKV6: vector decay + bonus
+# ---------------------------------------------------------------------------
+
+def rwkv_chunked(
+    r: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    logw: jax.Array,
+    u: jax.Array,
+    s0: jax.Array,
+    *,
+    chunk: int = 32,
+):
+    """Args:
+      r/k/v: (B, L, H, N); logw: (B, L, H, N) (log decay, ≤ 0);
+      u: (H, N) bonus; s0: (B, H, N, N) initial state (k-dim × v-dim).
+    Returns: (o (B, L, H, N), s_final).
+    """
+    b, l, h, n = r.shape
+    c = min(chunk, l)
+    pad = (-l) % c
+    if pad:
+        z = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = z(r), z(k), z(v)
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    rf = _chunk(r.astype(jnp.float32), c)
+    kf = _chunk(k.astype(jnp.float32), c)
+    vf = _chunk(v.astype(jnp.float32), c)
+    lw = _chunk(logw.astype(jnp.float32), c)
+    uf = u.astype(jnp.float32)
+
+    tri_strict = jnp.tril(jnp.ones((c, c), bool), -1)
+
+    def body(s, inp):
+        rc, kc, vc, lwc = inp  # (B, c, H, N)
+        la = jnp.cumsum(lwc, axis=1)            # inclusive:  la_t = Σ_{j<=t} logw_j
+        la_prev = la - lwc                      # exclusive:  Σ_{j<t}
+        # pairwise per-channel decay exp(la_prev_t - la_s), strictly lower tri
+        dmat = la_prev[:, :, None] - la[:, None, :, :, :]      # (B, t, s, H, N)
+        dmat = jnp.where(tri_strict[None, :, :, None, None], dmat, -jnp.inf)
+        scores = jnp.einsum("bthn,bshn,btshn->bths", rc, kc, jnp.exp(dmat))
+        diag = jnp.einsum("bthn,hn,bthn->bth", rc, uf, kc)
+        o = jnp.einsum("bths,bshn->bthn", scores, vc)
+        o = o + diag[..., None] * vc
+        # inter-chunk: r_t diag(exp(la_prev_t)) S
+        o = o + jnp.einsum("bthn,bhnm->bthm", rc * jnp.exp(la_prev), s)
+        # state: S' = diag(exp(la_C)) S + Σ_s exp(la_C - la_s) k_s v_sᵀ
+        la_end = la[:, -1:]                      # (B, 1, H, N)
+        k_scaled = kc * jnp.exp(la_end - la)
+        s = jnp.exp(la_end[:, 0])[..., None] * s + jnp.einsum(
+            "bshn,bshm->bhnm", k_scaled, vc
+        )
+        return s, o
+
+    s_final, o = jax.lax.scan(body, s0.astype(jnp.float32), (rf, kf, vf, lw))
+    o = _unchunk(o)[:, :l]
+    return o.astype(v.dtype), s_final
+
+
+def rwkv_step(r, k, v, logw, u, s):
+    """Single decode step. r/k/v/logw: (B, H, N); s: (B, H, N, N)."""
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    sf = s.astype(jnp.float32)
+    kv = kf[..., :, None] * vf[..., None, :]            # (B, H, N, N)
+    o = jnp.einsum("bhn,bhnm->bhm", rf, sf + u.astype(jnp.float32)[..., None] * kv)
+    s_new = jnp.exp(logw.astype(jnp.float32))[..., None] * sf + kv
+    return o.astype(v.dtype), s_new
+
+
+def rwkv_scan_reference(r, k, v, logw, u, s0):
+    """Step-by-step oracle (tests)."""
+
+    def body(s, inp):
+        rt, kt, vt, wt = inp
+        o, s = rwkv_step(rt, kt, vt, wt, u, s)
+        return s, o
+
+    xs = tuple(x.swapaxes(0, 1) for x in (r, k, v, logw))
+    s, o = jax.lax.scan(body, s0.astype(jnp.float32), xs)
+    return o.swapaxes(0, 1), s
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD: scalar-per-head decay
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(
+    x: jax.Array,
+    dt: jax.Array,
+    a_log: jax.Array,
+    b_in: jax.Array,
+    c_in: jax.Array,
+    d_skip: jax.Array,
+    h0: jax.Array,
+    *,
+    chunk: int = 64,
+):
+    """Args:
+      x: (B, L, H, P); dt: (B, L, H) (post-softplus, > 0);
+      a_log: (H,) (A = -exp(a_log) < 0); b_in/c_in: (B, L, N) (n_groups=1);
+      d_skip: (H,); h0: (B, H, P, N).
+    Returns: (y (B, L, H, P), h_final).
+    """
+    b, l, h, p = x.shape
+    c = min(chunk, l)
+    pad = (-l) % c
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0)))
+
+    a = -jnp.exp(a_log.astype(jnp.float32))               # (H,)
+    xf = _chunk(x.astype(jnp.float32), c)
+    dtf = _chunk(dt.astype(jnp.float32), c)
+    bf = _chunk(b_in.astype(jnp.float32), c)
+    cf = _chunk(c_in.astype(jnp.float32), c)
+    tri = jnp.tril(jnp.ones((c, c), bool))
+
+    def body(hst, inp):
+        xc, dtc, bc, cc = inp                              # (B,c,H,P), (B,c,H), (B,c,N)
+        la = jnp.cumsum(dtc * a, axis=1)                   # (B, c, H), ≤ 0, decreasing
+        dmat = la[:, :, None] - la[:, None, :, :]          # (B, t, s, H) ≤ 0 for s<=t
+        dmat = jnp.where(tri[None, :, :, None], dmat, -jnp.inf)
+        cb = jnp.einsum("btn,bsn->bts", cc, bc)
+        scores = cb[..., None] * jnp.exp(dmat) * dtc[:, None]   # (B,t,s,H)
+        y = jnp.einsum("btsh,bshp->bthp", scores, xc)
+        # inter-chunk: y_t += C_t · exp(la_t) h0   (h: (B,H,P,N))
+        y = y + jnp.einsum("btn,bhpn,bth->bthp", cc, hst, jnp.exp(la))
+        # state update
+        la_end = la[:, -1:]                                # (B,1,H)
+        w = jnp.exp(la_end - la) * dtc                     # (B,c,H)
+        hst = jnp.exp(la_end[:, 0])[..., None, None] * hst + jnp.einsum(
+            "bshp,bsn,bsh->bhpn", xc, bc, w
+        )
+        return hst, y
+
+    h_final, y = jax.lax.scan(body, h0.astype(jnp.float32), (xf, dtf, bf, cf))
+    y = _unchunk(y)[:, :l]
+    y = y + d_skip.astype(jnp.float32)[None, None, :, None] * x[:, :l].astype(jnp.float32)
+    return y.astype(x.dtype), h_final
+
+
+def ssd_step(x, dt, a_log, b_in, c_in, d_skip, h):
+    """Single decode step. x: (B,H,P); dt: (B,H); b/c: (B,N); h: (B,H,P,N)."""
+    xf = x.astype(jnp.float32)
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    decay = jnp.exp(dt.astype(jnp.float32) * a)            # (B, H)
+    h_new = decay[..., None, None] * h.astype(jnp.float32) + jnp.einsum(
+        "bhp,bn,bh->bhpn", xf, b_in.astype(jnp.float32), dt.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhpn,bn->bhp", h_new, c_in.astype(jnp.float32))
+    y = y + d_skip.astype(jnp.float32)[None, :, None] * xf
+    return y.astype(x.dtype), h_new
+
+
+def ssd_scan_reference(x, dt, a_log, b_in, c_in, d_skip, h0):
+    def body(h, inp):
+        xt, dtt, bt, ct = inp
+        y, h = ssd_step(xt, dtt, a_log, bt, ct, d_skip, h)
+        return h, y
+
+    xs = (
+        x.swapaxes(0, 1),
+        dt.swapaxes(0, 1),
+        b_in.swapaxes(0, 1),
+        c_in.swapaxes(0, 1),
+    )
+    h, y = jax.lax.scan(body, h0.astype(jnp.float32), xs)
+    return y.swapaxes(0, 1), h

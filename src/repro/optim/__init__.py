@@ -1,0 +1,2 @@
+from repro.optim.sgd import Optimizer, adamw, get_optimizer, lars, sgd
+from repro.optim.schedules import constant, lr_scale, one_cycle, warmup_multistep

@@ -1,0 +1,169 @@
+"""Optimizers (self-contained, optax-style init/update pairs).
+
+The paper's experiments use SGD with momentum; we additionally provide AdamW
+and LARS (the paper proposes LARS-in-decentralized as future work — included
+here as a beyond-paper feature).
+
+All optimizers are pure pytree transforms usable per-node under
+vmap (simulator) or shard_map (SPMD engine): state lives alongside params
+with the same leading gossip axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+__all__ = ["Optimizer", "sgd", "adamw", "lars"]
+
+
+class Optimizer(NamedTuple):
+    """init(params) -> state; update(grads, state, params, lr) -> (new_params, new_state)."""
+
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree, jax.Array], tuple[PyTree, PyTree]]
+    name: str
+    state_specs: Callable[[PyTree], PyTree] = lambda param_specs: ()
+    """Maps a logical param-spec tree to the optimizer-state spec tree
+    (used by the launcher to shard optimizer state like its parameters)."""
+
+
+def _zeros_like_f32(params: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def sgd(momentum: float = 0.9, weight_decay: float = 0.0, nesterov: bool = False) -> Optimizer:
+    """SGD + heavy-ball momentum (+ optional decoupled weight decay)."""
+
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return _zeros_like_f32(params)
+
+    def update(grads, state, params, lr):
+        lr = jnp.asarray(lr, jnp.float32)
+
+        def upd(g, m, p):
+            g = g.astype(jnp.float32)
+            if weight_decay:
+                g = g + weight_decay * p.astype(jnp.float32)
+            if momentum == 0.0:
+                step = g
+                new_m = m
+            else:
+                new_m = momentum * m + g
+                step = g + momentum * new_m if nesterov else new_m
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), new_m
+
+        if momentum == 0.0:
+            new = jax.tree.map(lambda g, p: upd(g, None, p)[0], grads, params)
+            return new, state
+        flat = jax.tree.map(upd, grads, state, params)
+        new_params = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_state = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, new_state
+
+    state_specs = (lambda ps: ()) if momentum == 0.0 else (lambda ps: ps)
+    return Optimizer(init, update, f"sgd(m={momentum},wd={weight_decay})", state_specs)
+
+
+def adamw(
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> Optimizer:
+    """AdamW with decoupled weight decay."""
+
+    def init(params):
+        return {
+            "mu": _zeros_like_f32(params),
+            "nu": _zeros_like_f32(params),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        t = state["t"] + 1
+        lr = jnp.asarray(lr, jnp.float32)
+        c1 = 1.0 - b1 ** t.astype(jnp.float32)
+        c2 = 1.0 - b2 ** t.astype(jnp.float32)
+
+        def upd(g, mu, nu, p):
+            g = g.astype(jnp.float32)
+            mu = b1 * mu + (1 - b1) * g
+            nu = b2 * nu + (1 - b2) * g * g
+            step = (mu / c1) / (jnp.sqrt(nu / c2) + eps)
+            p32 = p.astype(jnp.float32)
+            if weight_decay:
+                step = step + weight_decay * p32
+            return (p32 - lr * step).astype(p.dtype), mu, nu
+
+        flat = jax.tree.map(upd, grads, state["mu"], state["nu"], params)
+        is3 = lambda x: isinstance(x, tuple)
+        return (
+            jax.tree.map(lambda t_: t_[0], flat, is_leaf=is3),
+            {
+                "mu": jax.tree.map(lambda t_: t_[1], flat, is_leaf=is3),
+                "nu": jax.tree.map(lambda t_: t_[2], flat, is_leaf=is3),
+                "t": t,
+            },
+        )
+
+    return Optimizer(
+        init, update, f"adamw(b1={b1},b2={b2},wd={weight_decay})",
+        lambda ps: {"mu": ps, "nu": ps, "t": ()},
+    )
+
+
+def lars(
+    momentum: float = 0.9,
+    weight_decay: float = 1e-4,
+    trust_coefficient: float = 0.001,
+    eps: float = 1e-9,
+) -> Optimizer:
+    """Layer-wise Adaptive Rate Scaling (You et al., 2017).
+
+    The paper flags LARS-in-decentralized-training as future work (§4.2) —
+    provided here so the large-batch generalization gap at 16K global batch
+    can be attacked directly.
+    """
+
+    def init(params):
+        return _zeros_like_f32(params)
+
+    def update(grads, state, params, lr):
+        lr = jnp.asarray(lr, jnp.float32)
+
+        def upd(g, m, p):
+            g = g.astype(jnp.float32)
+            p32 = p.astype(jnp.float32)
+            g = g + weight_decay * p32
+            p_norm = jnp.linalg.norm(p32)
+            g_norm = jnp.linalg.norm(g)
+            trust = jnp.where(
+                (p_norm > 0) & (g_norm > 0),
+                trust_coefficient * p_norm / (g_norm + eps),
+                1.0,
+            )
+            new_m = momentum * m + trust * g
+            return (p32 - lr * new_m).astype(p.dtype), new_m
+
+        flat = jax.tree.map(upd, grads, state, params)
+        is2 = lambda x: isinstance(x, tuple)
+        return (
+            jax.tree.map(lambda t: t[0], flat, is_leaf=is2),
+            jax.tree.map(lambda t: t[1], flat, is_leaf=is2),
+        )
+
+    return Optimizer(init, update, f"lars(m={momentum},wd={weight_decay})", lambda ps: ps)
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    try:
+        return {"sgd": sgd, "adamw": adamw, "lars": lars}[name](**kw)
+    except KeyError:
+        raise ValueError(f"unknown optimizer {name!r}") from None

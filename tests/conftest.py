@@ -1,0 +1,12 @@
+import os
+import sys
+
+# Tests see exactly one (CPU) device — the 512-device override lives ONLY in
+# launch/dryrun.py.  Keep retracing cheap and deterministic.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_default_matmul_precision", "highest")

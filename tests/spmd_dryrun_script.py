@@ -1,0 +1,49 @@
+"""Subprocess body for test_spmd.py: mini dry-run (8 host devices).
+
+Mirrors launch/dryrun.py on a (2, 2, 2) pod×data×model mesh with reduced
+configs: train + prefill + decode must lower AND compile for one arch per
+family, including the multi-pod gossip axes.
+"""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses
+
+import jax
+
+from repro.configs import get_config
+from repro.configs.base import InputShape
+from repro.core.dsgd import make_topology
+from repro.launch.dryrun import collective_stats
+from repro.launch.mesh import gossip_axes_for, gossip_size, make_mesh
+from repro.launch.serve import ServeEngine
+from repro.launch.train import SPMDTrainer
+from repro.optim.sgd import sgd
+
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+train_shape = InputShape("mini_train", 64, 8, "train")
+prefill_shape = InputShape("mini_prefill", 256, 4, "prefill")
+decode_shape = InputShape("mini_decode", 256, 8, "decode")
+
+for arch in ["granite-8b", "phi3.5-moe-42b-a6.6b", "rwkv6-1.6b", "zamba2-7b", "kimi-k2-1t-a32b"]:
+    cfg = dataclasses.replace(get_config(arch + "-reduced"), name=arch)
+    gx = gossip_axes_for(cfg.name, mesh)
+    g = gossip_size(mesh, gx)
+    topo = make_topology("d_ada" if g > 2 else "d_ring", g)
+    trainer = SPMDTrainer(cfg, mesh, topo, sgd(momentum=0.9))
+    compiled = trainer.lower_step(train_shape).compile()
+    stats = collective_stats(compiled.as_text())
+    assert compiled.cost_analysis()["flops"] > 0
+    if g > 1:
+        assert (
+            "collective-permute" in stats or "all-reduce" in stats
+        ), f"{arch}: no gossip collectives found"
+    eng = ServeEngine(cfg, mesh)
+    eng.lower_prefill(prefill_shape).compile()
+    eng.lower_decode(decode_shape).compile()
+    print(f"{arch}: gossip_axes={gx} G={g} ok", flush=True)
+
+print("MINI_DRYRUN_OK")

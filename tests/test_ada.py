@@ -1,0 +1,62 @@
+"""Ada schedule (Algorithm 1) properties."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.ada import AdaSchedule, default_k0
+from repro.core.dsgd import make_topology
+
+
+@given(
+    st.integers(min_value=4, max_value=1008),
+    st.integers(min_value=2, max_value=112),
+    st.floats(min_value=0.001, max_value=2.0),
+)
+@settings(max_examples=50, deadline=None)
+def test_k_monotone_with_floor(n, k0, gamma):
+    s = AdaSchedule(n_nodes=n, k0=k0, gamma_k=gamma)
+    ks = [s.k_at(e) for e in range(0, 500, 7)]
+    assert all(a >= b for a, b in zip(ks, ks[1:]))  # non-increasing
+    assert min(ks) >= 2                              # Algorithm 1 floor
+    assert max(ks) <= max(n - 1, 1)
+    assert s.k_at(0) == min(k0, max(n - 1, 1))
+
+
+def test_paper_table4_settings():
+    """k0=10, gamma=0.02 @96 nodes; k0=112, gamma=1 @1008 nodes."""
+    s96 = AdaSchedule(n_nodes=96, k0=10, gamma_k=0.02)
+    assert s96.k_at(0) == 10 and s96.k_at(299) == 5
+    s1008 = AdaSchedule(n_nodes=1008, k0=112, gamma_k=1.0)
+    assert s1008.k_at(0) == 112
+    assert s1008.k_at(110) == 2 and s1008.k_at(200) == 2  # floored
+
+
+def test_default_k0_is_paper_heuristic():
+    assert default_k0(96) == 10
+    assert default_k0(9) == 1 or default_k0(9) == 2  # max(n//9, 2)
+    assert default_k0(9) == 2
+    assert default_k0(1008) == 112
+
+
+def test_distinct_graphs_enumeration():
+    s = AdaSchedule(n_nodes=96, k0=10, gamma_k=0.02)
+    graphs = s.distinct_graphs(300)
+    ks = [g.describe() for _, g in graphs]
+    assert len(graphs) == len(set(ks))  # no duplicates
+    epochs = [e for e, _ in graphs]
+    assert epochs == sorted(epochs) and epochs[0] == 0
+
+
+def test_ada_topology_evolves_to_sparser():
+    t = make_topology("d_ada", 96, k0=10, gamma_k=0.02)
+    assert t.adaptive
+    d0 = t.degree_at(0)
+    d_late = t.degree_at(299)
+    assert d0 > d_late >= 2
+
+
+def test_mixing_matrix_rows_sum_to_one_every_epoch():
+    s = AdaSchedule(n_nodes=24, k0=12, gamma_k=0.1)
+    for e in range(0, 200, 10):
+        w = s.mixing_matrix_at(e)
+        assert np.allclose(w.sum(1), 1.0)

@@ -1,0 +1,77 @@
+"""DBench variance metrics vs direct numpy oracles + rank analysis."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import dbench
+
+ARRS = st.lists(
+    st.floats(min_value=0.01, max_value=100.0, allow_nan=False),
+    min_size=3, max_size=16,
+)
+
+
+@given(ARRS)
+@settings(max_examples=50, deadline=None)
+def test_gini_bounds_and_oracle(vals):
+    x = np.array(vals)
+    g = dbench.gini(x)
+    # brute-force oracle
+    n = len(x)
+    want = np.abs(x[:, None] - x[None, :]).sum() / (2 * n * n * x.mean())
+    assert np.allclose(g, want, atol=1e-9)
+    assert 0.0 <= float(g) < 1.0
+
+
+def test_metrics_zero_on_constant():
+    x = np.full((8, 3), 7.0)
+    rep = dbench.variance_report(x)
+    for name, v in rep.items():
+        assert np.allclose(v, 0.0), name
+
+
+@given(ARRS, st.floats(min_value=1.5, max_value=10.0))
+@settings(max_examples=30, deadline=None)
+def test_metrics_scale_invariance(vals, c):
+    """gini/CoV/QCD are scale-invariant; index of dispersion is not."""
+    x = np.array(vals)
+    for fn in (dbench.gini, dbench.coefficient_of_variation, dbench.quartile_coefficient):
+        assert np.allclose(fn(x), fn(c * x), atol=1e-8), fn.__name__
+
+
+def test_more_dispersion_higher_gini():
+    rng = np.random.default_rng(0)
+    base = 10 + rng.normal(size=64) * 0.1
+    wide = 10 + rng.normal(size=64) * 3.0
+    assert dbench.gini(wide) > dbench.gini(base)
+
+
+def test_param_l2_norms():
+    params = {"a": jnp.ones((3, 4)), "b": 2.0 * jnp.ones((5,))}
+    norms = dbench.param_l2_norms(params)
+    want = sorted([np.sqrt(12.0), np.sqrt(20.0)])
+    assert sorted(np.asarray(norms).tolist()) == [float(w) for w in want] or \
+        np.allclose(sorted(np.asarray(norms)), want, atol=1e-6)
+
+
+def test_rank_analysis_orders_implementations():
+    iters, leaves = 5, 4
+    low = np.full((iters, leaves), 0.1)
+    mid = np.full((iters, leaves), 0.5)
+    high = np.full((iters, leaves), 0.9)
+    ranks = dbench.rank_analysis({"c_complete": low, "d_torus": mid, "d_ring": high})
+    assert np.all(ranks["c_complete"] == 1)
+    assert np.all(ranks["d_torus"] == 2)
+    assert np.all(ranks["d_ring"] == 3)
+
+
+def test_recorder_roundtrip():
+    rec = dbench.DBenchRecorder(impl="d_ring", n_nodes=4)
+    for t in range(3):
+        rec.record(t, np.ones(4) * (3 - t), np.abs(np.random.default_rng(t).normal(size=(4, 2))) + 1)
+    s = rec.summary()
+    assert s["impl"] == "d_ring" and len(s["mean_loss"]) == 3
+    assert s["mean_loss"][0] > s["mean_loss"][-1]
+    g = rec.metric_series("gini")
+    assert g.shape == (3, 2)

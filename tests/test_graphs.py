@@ -1,0 +1,118 @@
+"""Property tests for the communication graphs (paper Table 1)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.graphs import (
+    Complete, Exponential, Ring, RingLattice, Torus, make_graph, spectral_gap,
+)
+
+NS = st.integers(min_value=2, max_value=64)
+
+
+@given(NS)
+@settings(max_examples=30, deadline=None)
+def test_ring_degree_and_edges(n):
+    g = Ring(n)
+    assert g.degree == (1 if n == 2 else 2)
+    if n > 2:
+        assert g.num_edges == n  # Table 1
+    assert g.is_symmetric
+
+
+@given(st.integers(min_value=6, max_value=100))
+@settings(max_examples=30, deadline=None)
+def test_torus_matches_table(n):
+    g = Torus(n)
+    a = int(math.isqrt(n))
+    while n % a:
+        a -= 1
+    if a == 1 or a * (n // a) != n or min(a, n // a) < 2:
+        pytest.skip("degenerates to ring")
+    assert g.degree in (3, 4)  # 3 when offsets coincide (small grids)
+    assert g.is_symmetric
+
+
+@given(NS)
+@settings(max_examples=30, deadline=None)
+def test_exponential_matches_paper(n):
+    g = Exponential(n)
+    expected = int(math.floor(math.log2(n - 1))) + 1 if n > 2 else 1
+    # offsets 2^m mod n may collide for tiny n; degree <= formula
+    assert g.degree <= expected
+    if n > 4:
+        for i in range(min(n, 5)):
+            nbrs = set(g.neighbors(i))
+            want = {(i + 2 ** m) % n for m in range(expected)} - {i}
+            assert nbrs == want
+
+
+@given(NS)
+@settings(max_examples=30, deadline=None)
+def test_complete_graph(n):
+    g = Complete(n)
+    assert g.degree == n - 1
+    assert g.num_edges == n * (n - 1) // 2  # Table 1
+    assert abs(spectral_gap(g) - 1.0) < 1e-9
+
+
+@given(NS, st.integers(min_value=1, max_value=20))
+@settings(max_examples=50, deadline=None)
+def test_mixing_matrix_stochastic(n, k):
+    """W is row-stochastic for every graph; symmetric graphs doubly so."""
+    for g in (Ring(n), Torus(n), RingLattice(n, k), Exponential(n), Complete(n)):
+        w = g.mixing_matrix()
+        assert np.allclose(w.sum(axis=1), 1.0), g.name
+        assert (w >= 0).all()
+        if g.is_symmetric:
+            assert np.allclose(w, w.T), g.name
+        # consensus: spectral radius of W - J/n strictly below 1 (n > 1)
+        if g.degree > 0:
+            j = np.ones((n, n)) / n
+            rad = max(abs(np.linalg.eigvals(w - j)))
+            assert rad < 1.0 - 1e-12 or n <= 2, (g.name, rad)
+
+
+@given(st.integers(min_value=4, max_value=64), st.integers(min_value=2, max_value=10))
+@settings(max_examples=30, deadline=None)
+def test_ring_lattice_alg1(n, k):
+    """Algorithm 1: j in [-k//2, k//2], j != 0."""
+    g = RingLattice(n, k)
+    half = min(max(k // 2, 1), (n - 1) // 2)
+    nbrs = set(g.neighbors(0))
+    want = {j % n for j in range(-half, half + 1) if j != 0}
+    assert nbrs == want
+
+
+def test_connectivity_orders_spectral_gap():
+    """More connections => larger spectral gap (paper Obs. 2 mechanism)."""
+    n = 48
+    gaps = [spectral_gap(make_graph(k, n)) for k in
+            ("ring", "torus", "exponential", "complete")]
+    assert gaps == sorted(gaps), gaps
+
+
+def test_unknown_graph_raises():
+    with pytest.raises(ValueError):
+        make_graph("hypercube", 8)
+
+
+@given(st.sampled_from(["ring", "torus", "complete"]), st.integers(min_value=3, max_value=48))
+@settings(max_examples=30, deadline=None)
+def test_metropolis_weights_doubly_stochastic(kind, n):
+    """Beyond-paper MH weights: doubly stochastic on any undirected graph,
+    equal to Algorithm-1 uniform weights on regular graphs."""
+    g = make_graph(kind, n)
+    wm = g.mixing_matrix("metropolis")
+    assert np.allclose(wm.sum(axis=0), 1.0) and np.allclose(wm.sum(axis=1), 1.0)
+    assert np.allclose(wm, wm.T)
+    assert np.allclose(wm, g.mixing_matrix())  # regular graph => identical
+
+
+def test_metropolis_rejects_directed():
+    g = make_graph("exponential", 16)
+    with pytest.raises(ValueError):
+        g.mixing_matrix("metropolis")

@@ -1,0 +1,99 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize(
+    "b,h,kv,sq,sk,d",
+    [
+        (1, 2, 1, 128, 128, 64),
+        (2, 4, 2, 128, 256, 64),
+        (1, 8, 8, 256, 256, 32),
+        (1, 6, 2, 128, 128, 128),
+    ],
+)
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(b, h, kv, sq, sk, d, causal):
+    key = jax.random.PRNGKey(b * 100 + h)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, h, sq, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, kv, sk, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, kv, sk, d), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=causal, block_q=64, block_k=64)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, 2, 128, 64)).astype(dtype)
+    k = jax.random.normal(ks[1], (1, 2, 128, 64)).astype(dtype)
+    v = jax.random.normal(ks[2], (1, 2, 128, 64)).astype(dtype)
+    out = ops.flash_attention(q, k, v, block_q=64, block_k=64)
+    want = ref.flash_attention_ref(q, k, v)
+    assert out.dtype == dtype
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), atol=tol
+    )
+
+
+@pytest.mark.parametrize("window", [32, 96])
+def test_flash_attention_sliding_window(window):
+    key = jax.random.PRNGKey(5)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, 2, 256, 64))
+    k = jax.random.normal(ks[1], (1, 2, 256, 64))
+    v = jax.random.normal(ks[2], (1, 2, 256, 64))
+    out = ops.flash_attention(q, k, v, window=window, block_q=64, block_k=64)
+    want = ref.flash_attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("p,deg,block", [(1024, 2, 256), (4096, 6, 1024), (2048, 1, 2048)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gossip_update_sweep(p, deg, block, dtype):
+    key = jax.random.PRNGKey(p + deg)
+    ks = jax.random.split(key, 4)
+    theta = jax.random.normal(ks[0], (p,)).astype(dtype)
+    nbr = jax.random.normal(ks[1], (deg, p)).astype(dtype)
+    w = jnp.full((deg + 1,), 1.0 / (deg + 1))
+    g = jax.random.normal(ks[2], (p,)).astype(dtype)
+    m = jax.random.normal(ks[3], (p,)).astype(jnp.float32)
+    o1, m1 = ops.gossip_update(theta, nbr, w, g, m, lr=0.1, beta=0.9, block=block)
+    o2, m2 = ref.gossip_update_ref(theta, nbr, w, g, m, lr=0.1, beta=0.9)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(o1, np.float32), np.asarray(o2, np.float32), atol=tol
+    )
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), atol=1e-5)
+
+
+@pytest.mark.parametrize("r,p,block", [(1, 512, 512), (7, 3000, 512), (16, 2048, 2048)])
+def test_l2_norms_sweep(r, p, block):
+    x = jax.random.normal(jax.random.PRNGKey(r), (r, p))
+    out = ops.l2_norms(x, block=block)
+    want = ref.l2_norms_ref(x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+
+def test_l2_norms_matches_dbench_probe():
+    """The kernel agrees with the in-step jnp probe used by the trainer."""
+    from repro.core.dbench import param_l2_norms
+
+    params = {
+        "a": jax.random.normal(jax.random.PRNGKey(0), (37, 11)),
+        "b": jax.random.normal(jax.random.PRNGKey(1), (257,)),
+    }
+    want = param_l2_norms(params)
+    flat = [x.ravel() for x in jax.tree.leaves(params)]
+    pmax = max(x.size for x in flat)
+    mat = jnp.stack([jnp.pad(x, (0, pmax - x.size)) for x in flat])
+    got = ops.l2_norms(mat, block=128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)

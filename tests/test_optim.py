@@ -1,0 +1,97 @@
+"""Optimizers, schedules, and the paper's LR scaling policies."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import constant, get_optimizer, lr_scale, one_cycle, warmup_multistep
+
+
+def test_sgd_momentum_manual():
+    opt = get_optimizer("sgd", momentum=0.9)
+    p = {"w": jnp.array([1.0, 2.0])}
+    g = {"w": jnp.array([0.5, -1.0])}
+    st = opt.init(p)
+    p1, st1 = opt.update(g, st, p, 0.1)
+    np.testing.assert_allclose(p1["w"], [1.0 - 0.05, 2.0 + 0.1], atol=1e-6)
+    p2, st2 = opt.update(g, st1, p1, 0.1)
+    # m2 = 0.9*0.5 + 0.5 = 0.95
+    np.testing.assert_allclose(p2["w"][0], p1["w"][0] - 0.1 * 0.95, atol=1e-6)
+
+
+def test_sgd_weight_decay():
+    opt = get_optimizer("sgd", momentum=0.0, weight_decay=0.1)
+    p = {"w": jnp.array([2.0])}
+    g = {"w": jnp.array([0.0])}
+    p1, _ = opt.update(g, opt.init(p), p, 1.0)
+    np.testing.assert_allclose(p1["w"], [2.0 - 0.2], atol=1e-6)
+
+
+def test_adamw_first_step_is_lr_sized():
+    opt = get_optimizer("adamw", weight_decay=0.0)
+    p = {"w": jnp.array([0.0])}
+    g = {"w": jnp.array([3.0])}
+    p1, _ = opt.update(g, opt.init(p), p, 1e-2)
+    np.testing.assert_allclose(p1["w"], [-1e-2], rtol=1e-4)
+
+
+def test_lars_trust_ratio_scales_step():
+    opt = get_optimizer("lars", momentum=0.0, weight_decay=0.0, trust_coefficient=0.01)
+    p = {"w": jnp.full((4,), 10.0)}
+    g = {"w": jnp.full((4,), 1.0)}
+    p1, _ = opt.update(g, opt.init(p), p, 1.0)
+    # trust = 0.01 * |p| / |g| = 0.01 * 20 / 2 = 0.1 -> step 0.1*g
+    np.testing.assert_allclose(p1["w"], 10.0 - 0.1, rtol=1e-5)
+
+
+def test_all_optimizers_descend_quadratic():
+    target = jnp.arange(4.0)
+    for name, lr in [("sgd", 0.1), ("adamw", 0.05), ("lars", 5.0)]:
+        opt = get_optimizer(name)
+        p = {"w": jnp.zeros(4)}
+        st = opt.init(p)
+        for _ in range(200):
+            g = jax.grad(lambda pp: jnp.sum((pp["w"] - target) ** 2))(p)
+            p, st = opt.update(g, st, p, lr)
+        err = float(jnp.linalg.norm(p["w"] - target))
+        assert err < 0.5, (name, err)
+
+
+# -- paper Table 2 scaling policies --------------------------------------------
+
+def test_lr_scale_linear_vs_sqrt():
+    """Obs. 3: sqrt scaling is the rescue at large scale/degree."""
+    lin = lr_scale("linear", global_batch=1024, base_batch=256, graph_degree=3)
+    sq = lr_scale("sqrt", global_batch=1024, base_batch=256, graph_degree=3)
+    assert lin == pytest.approx(16.0)
+    assert sq == pytest.approx(4.0)
+    assert sq < lin  # sqrt reduces the resulting LR significantly (§3.2)
+
+
+def test_lr_scale_grows_with_connectivity():
+    """Table 2: s = batch * (k+1) / base — degree-aware scaling."""
+    s_ring = lr_scale("linear", global_batch=256, graph_degree=2)
+    s_complete = lr_scale("linear", global_batch=256, graph_degree=95)
+    assert s_complete / s_ring == pytest.approx(96 / 3)
+
+
+def test_warmup_multistep_shape():
+    f = warmup_multistep(0.1, steps_per_epoch=10, warmup_epochs=5,
+                         milestones=(30, 60, 80), decay=0.1, scale=2.0)
+    assert f(0) < f(49)                       # warming up
+    assert f(49) == pytest.approx(0.2, rel=1e-2)
+    assert f(10 * 30) == pytest.approx(0.02, rel=1e-6)
+    assert f(10 * 80) == pytest.approx(0.0002, rel=1e-6)
+
+
+def test_one_cycle_shape():
+    f = one_cycle(0.15, steps_per_epoch=10)
+    assert f(10) < f(230)        # rising phase
+    assert f(230) > f(2990)      # annealing
+    assert f(2990) == pytest.approx(0.015, rel=0.1)
+
+
+def test_constant():
+    assert constant(0.3)(12345) == 0.3

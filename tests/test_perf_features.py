@@ -1,0 +1,161 @@
+"""Tests for the §Perf machinery: loop-aware HLO accounting, exact head
+padding, causal-skip chunked attention, and infrequent gossip."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.models.attention import (
+    active_head_mask, head_padding, multihead_attention,
+)
+
+
+# ---------------------------------------------------------------------------
+# hlo_analysis: loop-aware costs
+# ---------------------------------------------------------------------------
+
+def _scan_module_text(length):
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        out, _ = jax.lax.scan(body, x, None, length=length)
+        return out
+
+    return jax.jit(f).lower(jnp.ones((32, 32)), jnp.ones((32, 32))).compile().as_text()
+
+
+def test_hlo_dot_flops_scale_with_trip_count():
+    r4 = analyze_hlo(_scan_module_text(4))
+    r8 = analyze_hlo(_scan_module_text(8))
+    assert r4["dot_flops"] == pytest.approx(4 * 2 * 32**3)
+    assert r8["dot_flops"] == pytest.approx(2 * r4["dot_flops"])
+
+
+def test_hlo_nested_loops_multiply():
+    def g(x, w):
+        def outer(c, _):
+            def inner(c2, _):
+                return c2 @ w, None
+            c2, _ = jax.lax.scan(inner, c, None, length=3)
+            return c2, None
+        out, _ = jax.lax.scan(outer, x, None, length=5)
+        return out
+
+    txt = jax.jit(g).lower(jnp.ones((16, 16)), jnp.ones((16, 16))).compile().as_text()
+    r = analyze_hlo(txt)
+    assert r["dot_flops"] == pytest.approx(15 * 2 * 16**3)
+
+
+def test_hlo_traffic_positive_and_collectives_empty_on_single_device():
+    r = analyze_hlo(_scan_module_text(2))
+    assert r["traffic_bytes"] > 0
+    assert r["total_wire_bytes"] == 0
+
+
+# ---------------------------------------------------------------------------
+# head padding (exactness + algebraic properties)
+# ---------------------------------------------------------------------------
+
+@given(
+    st.integers(min_value=1, max_value=8),   # group size
+    st.integers(min_value=1, max_value=32),  # kv heads
+    st.sampled_from([2, 4, 8, 16]),
+    st.booleans(),
+)
+@settings(max_examples=80, deadline=None)
+def test_head_padding_properties(group, kv, tp, pad_kv):
+    h = group * kv
+    h_pad, kv_pad, g_pad = head_padding(h, kv, tp, pad_kv=pad_kv)
+    assert h_pad == kv_pad * g_pad
+    assert h_pad % tp == 0
+    if pad_kv:
+        assert kv_pad % tp == 0
+    assert h_pad >= h and kv_pad >= kv and g_pad >= group
+    mask = np.asarray(active_head_mask(h, kv, h_pad, kv_pad, g_pad))
+    assert mask.sum() == h  # exactly the original heads stay active
+    # every active head's kv index is an original kv head
+    idx = np.nonzero(mask)[0]
+    assert (idx // g_pad < kv).all()
+
+
+def test_padding_noop_when_divisible():
+    assert head_padding(32, 8, 16) in [(32, 8, 4)]
+    assert head_padding(32, 8, 1) == (32, 8, 4)
+
+
+def test_padded_attention_matches_unpadded():
+    """Zero-padded q/k/v + masked output == original attention."""
+    b, s, h, kv, d = 2, 16, 6, 2, 8
+    tp = 4
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, kv, d))
+    v = jax.random.normal(ks[2], (b, s, kv, d))
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    base = multihead_attention(q, k, v, q_positions=pos, k_positions=pos, causal=True)
+
+    h_pad, kv_pad, g_pad = head_padding(h, kv, tp)
+    g = h // kv
+    qp = jnp.zeros((b, s, h_pad, d))
+    for kvi in range(kv):
+        qp = qp.at[:, :, kvi * g_pad : kvi * g_pad + g].set(
+            q[:, :, kvi * g : (kvi + 1) * g]
+        )
+    kp = jnp.zeros((b, s, kv_pad, d)).at[:, :, :kv].set(k)
+    vp = jnp.zeros((b, s, kv_pad, d)).at[:, :, :kv].set(v)
+    out = multihead_attention(qp, kp, vp, q_positions=pos, k_positions=pos, causal=True)
+    mask = active_head_mask(h, kv, h_pad, kv_pad, g_pad)
+    active = out[:, :, np.nonzero(np.asarray(mask))[0]]
+    np.testing.assert_allclose(np.asarray(active), np.asarray(base), atol=1e-5)
+
+
+def test_chunked_skip_equals_reference():
+    b, s, h, kv, d = 1, 40, 4, 2, 8
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, kv, d))
+    v = jax.random.normal(ks[2], (b, s, kv, d))
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    ref = multihead_attention(q, k, v, q_positions=pos, k_positions=pos, causal=True)
+    for window in (None, 7):
+        want = multihead_attention(q, k, v, q_positions=pos, k_positions=pos,
+                                   causal=True, window=window)
+        got = multihead_attention(q, k, v, q_positions=pos, k_positions=pos,
+                                  causal=True, window=window,
+                                  impl="chunked_skip", chunk_size=8)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+    assert ref.shape == (b, s, h, d)
+
+
+# ---------------------------------------------------------------------------
+# infrequent gossip (mix_every)
+# ---------------------------------------------------------------------------
+
+def test_mix_every_still_converges_to_consensus():
+    from repro.core.dsgd import make_topology
+    from repro.core.simulator import DecentralizedSimulator
+    from repro.optim.sgd import sgd
+
+    target = jnp.arange(4.0)
+
+    def loss(p, b):
+        return jnp.mean(jnp.sum((b - p["w"]) ** 2, -1))
+
+    sim = DecentralizedSimulator(
+        loss, sgd(momentum=0.0), make_topology("d_ring", 8), mix_every=5
+    )
+    st = sim.init({"w": jnp.zeros(4)})
+    key = jax.random.PRNGKey(0)
+    for t in range(200):
+        key, sub = jax.random.split(key)
+        b = target + 0.5 * jax.random.normal(sub, (8, 2, 4))
+        st, _, _ = sim.train_step(st, b, 0.05)
+    err = float(jnp.linalg.norm(st.mean_params()["w"] - target))
+    spread = float(jnp.abs(st.params["w"] - st.params["w"].mean(0)).max())
+    assert err < 0.3
+    assert spread < 0.5  # gossip every 5th step still binds the replicas
