@@ -1,0 +1,135 @@
+"""Compatibility shim for older jax (this container ships 0.4.37).
+
+The codebase targets the modern jax API (``jax.set_mesh``, ``jax.shard_map``
+with explicit ``axis_names`` leaving the rest of the mesh automatic,
+``jax.sharding.AxisType``).  On jax 0.4.37 none of those exist, and the
+partial-manual ``shard_map`` (``auto=`` nonempty) fatally crashes XLA:CPU's
+SPMD partitioner (``Check failed: IsManualSubgroup``) — the crash cannot be
+caught from Python.  Every mesh / shard_map call site therefore routes
+through this module:
+
+  * ``HAS_MANUAL_AXES_API``  — True on modern jax.  When False, callers that
+    need a *partial*-manual shard_map (manual gossip axes + auto model axis)
+    must use a different realization; ``SPMDTrainer`` switches to the stacked
+    GSPMD engine (vmap over the gossip axis + the ``GossipProgram`` stacked
+    interpreter, whose rolls/gathers XLA lowers to collective-permutes on a
+    sharded axis).
+  * ``shard_map``            — full-manual (auto = ∅) lowering on old jax via
+    ``jax.experimental.shard_map``; safe when the mesh has only gossip axes.
+  * ``set_mesh``             — context manager; ``jax.set_mesh`` on modern
+    jax, the plain ``with mesh:`` context on old jax.
+  * ``make_mesh``            — drops the ``axis_types`` kwarg on old jax.
+  * ``axis_size``            — ``jax.lax.axis_size`` or a psum(1) fallback.
+  * ``cost_analysis``        — normalizes the per-device list old jax returns.
+
+Old jax also defaults ``jax_threefry_partitionable=False``, which makes
+random values under ``jit(..., out_shardings=...)`` differ from eager for
+model-sharded leaves (breaking engine == simulator equivalence); importing
+this module flips the flag on old jax.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Callable, Sequence
+
+import jax
+
+__all__ = [
+    "HAS_MANUAL_AXES_API",
+    "make_mesh",
+    "set_mesh",
+    "shard_map",
+    "axis_size",
+    "cost_analysis",
+]
+
+#: Modern jax exposes AxisType + jax.shard_map and supports partial-manual
+#: shard_map (auto axes).  0.4.37 has neither.
+HAS_MANUAL_AXES_API = hasattr(jax.sharding, "AxisType") and hasattr(jax, "shard_map")
+
+if not HAS_MANUAL_AXES_API:
+    # Equivalence-critical on old jax: without partitionable threefry, RNG
+    # under jit+out_shardings diverges from eager for sharded leaves.
+    try:
+        jax.config.update("jax_threefry_partitionable", True)
+    except Exception:  # pragma: no cover - flag removed on some versions
+        pass
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with explicit Auto axis types where supported."""
+    if HAS_MANUAL_AXES_API:
+        return jax.make_mesh(
+            tuple(shape),
+            tuple(axes),
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+        )
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def set_mesh(mesh: jax.sharding.Mesh):
+    """Context manager installing ``mesh`` as the ambient mesh."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    # Old jax: Mesh is itself a context manager (the pjit mesh context);
+    # NamedSharding-carrying jits do not strictly need it, but sharding
+    # constraints inside traced code do.
+    return mesh
+
+
+def shard_map(
+    f: Callable,
+    *,
+    mesh: jax.sharding.Mesh,
+    in_specs: Any,
+    out_specs: Any,
+    axis_names: set | frozenset | None = None,
+    check_vma: bool = False,
+) -> Callable:
+    """``jax.shard_map`` on modern jax; full-manual fallback on old jax.
+
+    On old jax the fallback lowers *all* mesh axes manual (auto = ∅) — only
+    call it when every mesh axis is a gossip axis (e.g. a 1-D mixing mesh).
+    Callers needing manual-gossip × auto-model must branch on
+    ``HAS_MANUAL_AXES_API`` instead (see ``SPMDTrainer``).
+    """
+    if HAS_MANUAL_AXES_API:
+        return jax.shard_map(
+            f,
+            mesh=mesh,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            axis_names=axis_names if axis_names is not None else set(mesh.axis_names),
+            check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    if axis_names is not None and set(axis_names) != set(mesh.axis_names):
+        raise NotImplementedError(
+            "partial-manual shard_map is unavailable on jax "
+            f"{jax.__version__}: manual axes {set(axis_names)} != mesh axes "
+            f"{set(mesh.axis_names)} (it would crash the XLA:CPU partitioner). "
+            "Use the stacked GSPMD realization instead."
+        )
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
+
+
+def axis_size(axis_name) -> int:
+    """Size of a mapped axis inside shard_map/vmap."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    import jax.numpy as jnp
+
+    return jax.lax.psum(jnp.ones((), jnp.int32), axis_name)
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as a dict on every jax version.
+
+    Old jax returns a per-device *list* of dicts; new jax returns one dict.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost or {})

@@ -1,16 +1,24 @@
 """Core: the paper's contribution — decentralized data parallelism.
 
-graphs     communication graphs (ring/torus/ring-lattice/exponential/complete)
-mixing     dense / circulant-shift / ppermute gossip realizations
-ada        Ada adaptive ring-lattice schedule (Algorithm 1)
-dsgd       topology registry for the five SGD implementations (+ Ada)
+graphs     communication graphs (circulant fast path + general edge graphs:
+           ring/torus/ring-lattice/exponential/complete, one-peer
+           exponential, random matchings, star, from_adjacency)
+schedule   the mixing-program IR: compile any graph into a GossipProgram
+           with dense / stacked / shard_map interpreters
+mixing     thin façade over the IR (dense / shift / ppermute wrappers)
+ada        Ada adaptive ring-lattice schedule (Algorithm 1, + one-peer floor)
+dsgd       topology registry (epoch- and step-granular program schedules)
 dbench     white-box variance instrumentation (gini et al., rank analysis)
 simulator  vmap-based paper-faithful multi-node engine (CPU oracle)
 """
 from repro.core.ada import AdaSchedule, default_k0
 from repro.core.dsgd import TOPOLOGIES, Topology, make_topology
 from repro.core.graphs import (
-    CommGraph, Complete, Exponential, Ring, RingLattice, Torus, make_graph,
-    spectral_gap,
+    CirculantGraph, CommGraph, Complete, EdgeGraph, Exponential, Ring,
+    RingLattice, Star, Torus, from_adjacency, make_graph,
+    one_peer_exponential, random_matching, spectral_gap,
+)
+from repro.core.schedule import (
+    GossipProgram, compile_graph, dense_program, identity_program,
 )
 from repro.core.simulator import DecentralizedSimulator, SimState

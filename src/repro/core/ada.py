@@ -9,6 +9,14 @@ so the communication graph evolves from (near-)complete to a sparse ring,
 capturing the paper's Observation 5: high connectivity helps early, sparse
 graphs are free later.
 
+Beyond-paper extension (``k_floor="one_peer"``): instead of stopping at the
+k=2 ring, Ada can decay onto the *one-peer time-varying exponential* family
+(arXiv:2410.11998) — degree 1 per step, cycling hop 2^m per step — the
+cheapest per-step gossip that still mixes like an expander over a cycle.
+The schedule then becomes step-granular; ``graph_at(epoch, step)`` /
+``distinct_programs`` expose it, and both engines cache one executable per
+distinct ``GossipProgram`` (a handful per run, compiled at first use).
+
 Paper defaults (Table 4):
     ResNet20 / DenseNet100 / LSTM @ 96 GPUs : k0 = 10,  gamma_k = 0.02
     ResNet50 @ 1008 GPUs                    : k0 = 112, gamma_k = 1
@@ -20,10 +28,13 @@ from __future__ import annotations
 
 import dataclasses
 from functools import lru_cache
+from typing import Union
 
 import numpy as np
 
-from repro.core.graphs import CommGraph, RingLattice
+from repro.core.graphs import (
+    CommGraph, RingLattice, one_peer_exponential, one_peer_period,
+)
 
 __all__ = ["AdaSchedule", "default_k0"]
 
@@ -35,36 +46,58 @@ def default_k0(n_nodes: int) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class AdaSchedule:
-    """Maps epoch -> ring-lattice communication graph (Algorithm 1)."""
+    """Maps (epoch, step) -> communication graph (Algorithm 1 + extension).
+
+    k_floor: the decay floor.  An int (paper: 2) keeps the final graph a
+      static ring lattice; the string ``"one_peer"`` hands off to the
+      time-varying one-peer exponential family once the lattice would
+      decay below k=2.
+    """
 
     n_nodes: int
     k0: int
     gamma_k: float = 0.02
-    k_floor: int = 2  # Algorithm 1 line 2 (the §4.1 prose floors at 1)
+    k_floor: Union[int, str] = 2  # Algorithm 1 line 2, or "one_peer"
 
     @classmethod
     def auto(cls, n_nodes: int, gamma_k: float = 0.02) -> "AdaSchedule":
         return cls(n_nodes=n_nodes, k0=default_k0(n_nodes), gamma_k=gamma_k)
 
-    def k_at(self, epoch: int) -> int:
-        """Coordination number at an epoch (0-indexed)."""
-        k = self.k0 - int(self.gamma_k * epoch)
-        # A node cannot have more neighbors than n-1.
-        return int(np.clip(k, self.k_floor, max(self.n_nodes - 1, 1)))
+    # -- schedule ------------------------------------------------------------
+    def _k_raw(self, epoch: int) -> int:
+        return self.k0 - int(self.gamma_k * epoch)
 
-    def graph_at(self, epoch: int) -> CommGraph:
+    def one_peer_at(self, epoch: int) -> bool:
+        """True once the schedule has handed off to the one-peer family."""
+        return self.k_floor == "one_peer" and self._k_raw(epoch) < 2
+
+    def k_at(self, epoch: int) -> int:
+        """Coordination number at an epoch (0-indexed); 1 in one-peer mode."""
+        if self.one_peer_at(epoch):
+            return 1
+        floor = 2 if self.k_floor == "one_peer" else int(self.k_floor)
+        # A node cannot have more neighbors than n-1.
+        return int(np.clip(self._k_raw(epoch), floor, max(self.n_nodes - 1, 1)))
+
+    def graph_at(self, epoch: int, step: int = 0) -> CommGraph:
+        if self.one_peer_at(epoch):
+            return one_peer_exponential(self.n_nodes, step)
         return _lattice(self.n_nodes, self.k_at(epoch))
 
-    def mixing_matrix_at(self, epoch: int) -> np.ndarray:
+    def mixing_matrix_at(self, epoch: int, step: int = 0) -> np.ndarray:
         """Dense W per Algorithm 1 lines 3-8 (uniform 1/(k+1) weights)."""
-        return self.graph_at(epoch).mixing_matrix()
+        return self.graph_at(epoch, step).mixing_matrix()
 
+    def period_at(self, epoch: int) -> int:
+        """Steps before the graph repeats within an epoch (1 when static)."""
+        return one_peer_period(self.n_nodes) if self.one_peer_at(epoch) else 1
+
+    # -- up-front enumeration (zero mid-run recompiles) ----------------------
     def distinct_graphs(self, n_epochs: int) -> list[tuple[int, CommGraph]]:
         """(first_epoch, graph) for each distinct k over a run.
 
-        The SPMD engine compiles one train-step executable per distinct k;
-        this enumerates them up front (a handful — k is integer-valued and
-        monotone), so graph adaptation costs no mid-run recompiles.
+        For ``k_floor="one_peer"`` the one-peer phase contributes its step-0
+        graph only; use ``distinct_programs`` for the full step-granular set.
         """
         out: list[tuple[int, CommGraph]] = []
         last_k = None
@@ -74,6 +107,20 @@ class AdaSchedule:
                 out.append((e, self.graph_at(e)))
                 last_k = k
         return out
+
+    def distinct_programs(
+        self, n_epochs: int
+    ) -> list[tuple[tuple[int, int], "object"]]:
+        """((first_epoch, step_phase), GossipProgram) for every distinct
+        compiled mixing program over a run — the executables an engine needs.
+
+        Delegates to ``Topology.distinct_programs`` (the single enumeration
+        implementation).
+        """
+        from repro.core.dsgd import Topology
+
+        topo = Topology(name="d_ada", n_nodes=self.n_nodes, ada=self)
+        return topo.distinct_programs(n_epochs)
 
 
 @lru_cache(maxsize=256)

@@ -1,19 +1,32 @@
 """Topology registry for (de)centralized SGD (paper §3.1.2).
 
-The five benchmarked SGD implementations, plus Ada:
+The five benchmarked SGD implementations, Ada, and the beyond-paper
+time-varying families:
 
-  c_complete      centralized: all-reduce *gradients* (PyTorch-DDP analogue)
-  d_complete      decentralized: average *parameters* over the complete graph
-  d_ring          decentralized, ring
-  d_torus         decentralized, torus
-  d_exponential   decentralized, directed exponential graph
-  d_ring_lattice  decentralized, static ring lattice (coordination number k)
-  d_ada           decentralized, Ada adaptive ring lattice (Algorithm 1)
+  c_complete        centralized: all-reduce *gradients* (PyTorch-DDP analogue)
+  d_complete        decentralized: average *parameters* over the complete graph
+  d_ring            decentralized, ring
+  d_torus           decentralized, torus
+  d_exponential     decentralized, directed exponential graph
+  d_ring_lattice    decentralized, static ring lattice (coordination number k)
+  d_ada             decentralized, Ada adaptive ring lattice (Algorithm 1);
+                    ``k_floor="one_peer"`` decays onto the one-peer family
+  d_one_peer_exp    decentralized, one-peer time-varying exponential
+                    (degree 1 per step, arXiv:2410.11998)
+  d_random_matching decentralized, seeded random pairwise averaging rotating
+                    through a precompiled pool of matchings
+  d_star            decentralized, star graph (MH weights)
+  d_custom          decentralized, arbitrary undirected graph
+                    (``adjacency=`` matrix or edge list)
 
-A ``Topology`` answers one question per epoch: *which mixing graph is in
-force* (``None`` for the centralized implementation, which mixes gradients
-globally instead).  The engines (``core/simulator.py`` for vmap-on-CPU,
-``launch/train.py`` for shard_map-on-mesh) consume it.
+A ``Topology`` answers one question per (epoch, step): *which compiled
+mixing program is in force* (``program_at``; ``None`` for the centralized
+implementation, which mixes gradients globally instead).  Time-varying
+topologies rotate through a small program set that ``distinct_programs``
+enumerates up front; the engines cache one executable per program (compiled
+at its first use), so graph adaptation never recompiles.  The engines
+(``core/simulator.py`` for vmap-on-CPU, ``launch/train.py`` for
+shard_map-on-mesh) both interpret the same ``GossipProgram`` IR.
 
 Update order (paper §2.1, Lian et al. 2017 equivalence):
   ``post``: local SGD update, then gossip-average parameters (default)
@@ -22,12 +35,23 @@ Update order (paper §2.1, Lian et al. 2017 equivalence):
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Any, Optional
 
 from repro.core.ada import AdaSchedule, default_k0
-from repro.core.graphs import CommGraph, make_graph
+from repro.core.graphs import (
+    CommGraph, make_graph, one_peer_exponential, one_peer_period,
+    random_matching,
+)
+from repro.core.schedule import GossipProgram, compile_graph
 
-__all__ = ["Topology", "make_topology", "TOPOLOGIES"]
+__all__ = [
+    "Topology",
+    "GraphSequence",
+    "OnePeerSequence",
+    "MatchingSequence",
+    "make_topology",
+    "TOPOLOGIES",
+]
 
 TOPOLOGIES = (
     "c_complete",
@@ -37,34 +61,138 @@ TOPOLOGIES = (
     "d_exponential",
     "d_ring_lattice",
     "d_ada",
+    "d_one_peer_exp",
+    "d_random_matching",
+    "d_star",
+    "d_custom",
 )
 
 
+# ---------------------------------------------------------------------------
+# Step-varying graph sequences
+# ---------------------------------------------------------------------------
+
+class GraphSequence:
+    """A periodic step-indexed family of graphs (time-varying topology)."""
+
+    n: int
+
+    def period_steps(self) -> int:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def graph_at(self, step: int) -> CommGraph:  # pragma: no cover
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class OnePeerSequence(GraphSequence):
+    """One-peer exponential: hop 2^(t mod p), degree 1 per step."""
+
+    n: int
+
+    def period_steps(self) -> int:
+        return one_peer_period(self.n)
+
+    def graph_at(self, step: int) -> CommGraph:
+        return one_peer_exponential(self.n, step)
+
+
+@dataclasses.dataclass(frozen=True)
+class MatchingSequence(GraphSequence):
+    """Random pairwise averaging rotating through ``pool`` seeded matchings.
+
+    The pool bounds the number of compiled executables (randomized-but-
+    precompilable): step t uses matching ``(seed, t mod pool)``.
+    """
+
+    n: int
+    seed: int = 0
+    pool: int = 8
+
+    def period_steps(self) -> int:
+        return max(int(self.pool), 1)
+
+    def graph_at(self, step: int) -> CommGraph:
+        return random_matching(self.n, self.seed, step % self.period_steps())
+
+
+# ---------------------------------------------------------------------------
+# Topology
+# ---------------------------------------------------------------------------
+
 @dataclasses.dataclass(frozen=True)
 class Topology:
-    """A (possibly epoch-varying) communication topology."""
+    """A (possibly epoch- and step-varying) communication topology."""
 
     name: str
     n_nodes: int
     centralized: bool = False
     static_graph: Optional[CommGraph] = None
     ada: Optional[AdaSchedule] = None
+    sequence: Optional[GraphSequence] = None
     mix_order: str = "post"  # "post" | "pre"
 
-    def graph_at(self, epoch: int = 0) -> Optional[CommGraph]:
-        """The parameter-mixing graph at an epoch; None => centralized."""
+    def graph_at(self, epoch: int = 0, step: int = 0) -> Optional[CommGraph]:
+        """The parameter-mixing graph in force; None => centralized."""
         if self.centralized:
             return None
+        if self.sequence is not None:
+            return self.sequence.graph_at(step)
         if self.ada is not None:
-            return self.ada.graph_at(epoch)
+            return self.ada.graph_at(epoch, step)
         return self.static_graph
+
+    def program_at(self, *, step: int = 0, epoch: int = 0) -> Optional[GossipProgram]:
+        """The compiled mixing program in force; None => centralized.
+
+        Keyword-only: ``graph_at`` takes (epoch, step) in the opposite
+        order, so positional use would silently pick the wrong program.
+        """
+        g = self.graph_at(epoch, step)
+        return None if g is None else compile_graph(g)
+
+    def period_at(self, epoch: int = 0) -> int:
+        """Steps before the program repeats within an epoch (1 = static)."""
+        if self.sequence is not None:
+            return self.sequence.period_steps()
+        if self.ada is not None:
+            return self.ada.period_at(epoch)
+        return 1
+
+    def distinct_programs(
+        self, n_epochs: int = 1
+    ) -> list[tuple[tuple[int, int], GossipProgram]]:
+        """((first_epoch, step_phase), program) for every distinct compiled
+        program over a run — the bounded executable set an engine caches.
+
+        Generalizes ``AdaSchedule.distinct_graphs`` to step-granular and
+        randomized-with-pool topologies.
+        """
+        if self.centralized:
+            return []
+        out: list[tuple[tuple[int, int], GossipProgram]] = []
+        seen = set()
+        for e in range(max(int(n_epochs), 1)):
+            for s in range(self.period_at(e)):
+                prog = self.program_at(step=s, epoch=e)
+                if prog is not None and prog.cache_key not in seen:
+                    seen.add(prog.cache_key)
+                    out.append(((e, s), prog))
+        return out
 
     @property
     def adaptive(self) -> bool:
         return self.ada is not None
 
-    def degree_at(self, epoch: int = 0) -> int:
-        g = self.graph_at(epoch)
+    @property
+    def time_varying(self) -> bool:
+        """Does the graph change within an epoch (step-granular schedules)?"""
+        if self.sequence is not None:
+            return self.sequence.period_steps() > 1
+        return self.ada is not None and self.ada.k_floor == "one_peer"
+
+    def degree_at(self, epoch: int = 0, step: int = 0) -> int:
+        g = self.graph_at(epoch, step)
         return self.n_nodes - 1 if g is None else g.degree
 
     def describe(self) -> str:
@@ -73,7 +201,14 @@ class Topology:
         if self.ada is not None:
             return (
                 f"{self.name}: Ada ring-lattice k0={self.ada.k0} "
-                f"gamma_k={self.ada.gamma_k} over {self.n_nodes} nodes"
+                f"gamma_k={self.ada.gamma_k} k_floor={self.ada.k_floor} "
+                f"over {self.n_nodes} nodes"
+            )
+        if self.sequence is not None:
+            return (
+                f"{self.name}: time-varying "
+                f"{type(self.sequence).__name__} (period "
+                f"{self.sequence.period_steps()}) over {self.n_nodes} nodes"
             )
         return f"{self.name}: static {self.static_graph.describe()}"
 
@@ -85,8 +220,12 @@ def make_topology(
     k: int | None = None,
     k0: int | None = None,
     gamma_k: float = 0.02,
+    k_floor: int | str = 2,
+    seed: int = 0,
+    pool: int = 8,
     mix_order: str = "post",
     torus_grid: tuple[int, int] | None = None,
+    adjacency: Any = None,
 ) -> Topology:
     """Build one of the benchmarked topologies.
 
@@ -94,7 +233,9 @@ def make_topology(
       name: one of ``TOPOLOGIES``.
       n_nodes: gossip node count (the training scale).
       k: coordination number for ``d_ring_lattice``.
-      k0, gamma_k: Ada hyperparameters (default k0: paper's max(n//9, 2)).
+      k0, gamma_k, k_floor: Ada hyperparameters (default k0: paper's
+        max(n//9, 2); k_floor="one_peer" decays onto the one-peer family).
+      seed, pool: ``d_random_matching`` randomness and precompiled-pool size.
     """
     if mix_order not in ("post", "pre"):
         raise ValueError(f"mix_order must be 'post'|'pre', got {mix_order!r}")
@@ -120,6 +261,27 @@ def make_topology(
             n_nodes=n_nodes,
             k0=k0 if k0 is not None else default_k0(n_nodes),
             gamma_k=gamma_k,
+            k_floor=k_floor,
         )
         return Topology(ada=sched, **base)
+    if name == "d_one_peer_exp":
+        return Topology(sequence=OnePeerSequence(n_nodes), **base)
+    if name == "d_random_matching":
+        return Topology(
+            sequence=MatchingSequence(n_nodes, seed=seed, pool=pool), **base
+        )
+    if name == "d_star":
+        return Topology(static_graph=make_graph("star", n_nodes), **base)
+    if name == "d_custom":
+        if adjacency is None:
+            raise ValueError("d_custom requires adjacency")
+        g = make_graph("from_adjacency", n_nodes, adjacency=adjacency)
+        if g.n != n_nodes:
+            # edge lists infer n from the max index; a mismatch would make
+            # the mixing program and the replica axis silently disagree
+            raise ValueError(
+                f"adjacency describes {g.n} nodes but n_nodes={n_nodes}; "
+                "pass an (n, n) matrix to include trailing isolated nodes"
+            )
+        return Topology(static_graph=g, **base)
     raise ValueError(f"unknown topology {name!r}; one of {TOPOLOGIES}")

@@ -1,20 +1,26 @@
-"""Mixing (gossip averaging) implementations.
+"""Mixing (gossip averaging) — thin façade over the program IR.
 
-Three equivalent realizations of one mixing step  θ ← W θ :
+One mixing step  θ ← W θ  is executed by compiling the graph into a
+``GossipProgram`` (``core/schedule.py``) and running one of its three
+interpreters.  This module keeps the historical function-level API as
+wrappers over that single code path:
 
-  * ``mix_dense``    — dense mixing-matrix einsum over a stacked replica axis.
-                       Bit-faithful to the paper's equations; used by the CPU
-                       simulator and as the *paper-faithful baseline* in the
-                       perf study (costs an all-gather at scale).
-  * ``mix_shift``    — Σ_d w_d · roll(θ, d) over the stacked axis.  Exploits
-                       the circulant structure; under jit on a sharded axis
-                       XLA lowers each roll to collective-permutes.
-  * ``mix_ppermute`` — explicit ``jax.lax.ppermute`` schedule inside
-                       ``shard_map``; one permute per graph offset, plus the
-                       all-reduce fast path for the complete graph.  This is
-                       the production (beyond-paper-optimized) path.
+  * ``mix_dense``    — dense mixing-matrix einsum over a stacked replica
+                       axis.  Bit-faithful to the paper's equations; the
+                       correctness oracle (costs an all-gather at scale).
+  * ``mix_shift``    — the program's *stacked* interpreter: Σ_d w_d ·
+                       roll/gather over the stacked axis.  Under jit on a
+                       sharded axis XLA lowers each roll to
+                       collective-permutes.
+  * ``mix_ppermute`` — the program's *shard* interpreter inside
+                       ``shard_map``: one ``jax.lax.ppermute`` per PPermute
+                       op, all-reduce fast path for the complete graph.
+                       The production (beyond-paper-optimized) path.
 
-All three are tested for equivalence (tests/test_mixing.py).
+All three are tested for equivalence on every registered topology
+(tests/test_mixing.py, tests/test_schedule.py).  New call sites should use
+``graph.program().apply(...)`` / ``Topology.program_at(...)`` directly;
+these wrappers exist for the benchmark suite and backwards compatibility.
 """
 from __future__ import annotations
 
@@ -25,6 +31,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graphs import CommGraph
+from repro.core.schedule import (
+    GossipProgram, compile_graph, permutation_for_offset, program_comm_bytes,
+)
 
 PyTree = Any
 
@@ -44,15 +53,10 @@ def _tree_bytes(tree: PyTree) -> int:
 def mixing_comm_bytes(graph: CommGraph, params: PyTree) -> int:
     """Bytes sent per node per mixing step (analytic model).
 
-    complete graph is realized as an all-reduce: ring-reduced cost
-    2·P·(n-1)/n per node, not (n-1)·P.
+    Derived from the compiled program: permutes move P each, the complete
+    graph lowers to a ring all-reduce (2·P·(n-1)/n per node, not (n-1)·P).
     """
-    p = _tree_bytes(params)
-    if graph.degree == 0:
-        return 0
-    if graph.name == "complete":
-        return int(2 * p * (graph.n - 1) / graph.n)
-    return graph.degree * p
+    return program_comm_bytes(compile_graph(graph), _tree_bytes(params))
 
 
 # ---------------------------------------------------------------------------
@@ -72,35 +76,17 @@ def mix_dense(stacked: PyTree, w: jax.Array | np.ndarray) -> PyTree:
 
 
 # ---------------------------------------------------------------------------
-# Circulant shift (jit-friendly, XLA lowers rolls on sharded axes to
-# collective-permute)
+# Circulant shift / gather (jit-friendly; stacked interpreter)
 # ---------------------------------------------------------------------------
 
 def mix_shift(stacked: PyTree, graph: CommGraph) -> PyTree:
-    """θ_i ← w_self·θ_i + Σ_d w_d·θ_{(i+d) mod n}   via jnp.roll."""
-    if graph.degree == 0:
-        return stacked
-    pairs = graph.weighted_offsets()
-    ws = graph.self_weight
-
-    def _mix(x):
-        acc = ws * x.astype(jnp.float32)
-        for d, wd in pairs:
-            # receive from node (i+d): roll the stacked axis by -d
-            acc = acc + wd * jnp.roll(x, -d, axis=0).astype(jnp.float32)
-        return acc.astype(x.dtype)
-
-    return jax.tree.map(_mix, stacked)
+    """θ_i ← w_self·θ_i + Σ_d w_d·θ_{(i+d) mod n} over the stacked axis."""
+    return compile_graph(graph).apply_stacked(stacked)
 
 
 # ---------------------------------------------------------------------------
 # Explicit collective schedule (production path, inside shard_map)
 # ---------------------------------------------------------------------------
-
-def permutation_for_offset(n: int, d: int) -> list[tuple[int, int]]:
-    """ppermute pairs so that node i receives from node (i + d) % n."""
-    return [((i + d) % n, i) for i in range(n)]
-
 
 def mix_ppermute(
     local: PyTree,
@@ -119,23 +105,18 @@ def mix_ppermute(
       complete_as_allreduce: lower the complete graph as ``pmean`` (ring
         all-reduce, 2P(n-1)/n bytes) instead of n-1 permutes.
     """
-    if graph.degree == 0:
-        return local
-    if complete_as_allreduce and graph.name == "complete":
-        return jax.tree.map(
-            lambda x: jax.lax.pmean(x.astype(jnp.float32), axis_names).astype(x.dtype),
-            local,
+    program = compile_graph(graph)
+    if not complete_as_allreduce and graph.name == "complete":
+        # n-1 explicit permutes (benchmark baseline; never the default)
+        from repro.core.schedule import PPermute
+
+        program = GossipProgram(
+            name="complete_unrolled",
+            n=graph.n,
+            ops=tuple(
+                PPermute(permutation_for_offset(graph.n, d), wd, offset=d)
+                for d, wd in graph.weighted_offsets()
+            ),
+            self_weight=graph.self_weight,
         )
-
-    n = graph.n
-    pairs = graph.weighted_offsets()
-    ws = graph.self_weight
-
-    def _mix(x):
-        acc = ws * x.astype(jnp.float32)
-        for d, wd in pairs:
-            perm = permutation_for_offset(n, d)
-            acc = acc + wd * jax.lax.ppermute(x, axis_names, perm).astype(jnp.float32)
-        return acc.astype(x.dtype)
-
-    return jax.tree.map(_mix, local)
+    return program.apply_shard(local, axis_names)

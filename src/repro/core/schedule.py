@@ -1,0 +1,434 @@
+"""Mixing-program IR: compile any communication graph into a gossip program.
+
+A ``GossipProgram`` is a small list of primitive communication ops that
+realizes one mixing step  θ ← W θ  for an n-node gossip graph:
+
+  * ``PPermute(perm, weight[, offset])`` — every node receives one weighted
+    neighbor buffer along a permutation (a single collective-permute on the
+    wire).  ``offset`` marks the circulant special case (perm is the shift
+    ``i ← i+d``), which the stacked interpreter realizes as one ``jnp.roll``.
+  * ``AllReduce()``                      — uniform average over all nodes
+    (ring all-reduce; the complete-graph fast path).
+  * ``GatherRow(w)``                     — dense fallback: gather all
+    replicas, contract with this node's row of W.  Exact for *any* W; costs
+    an all-gather (kept for the paper-faithful dense baseline and irregular
+    graphs with no sparse decomposition).
+
+Program semantics (all interpreters agree to float32 accumulation):
+
+    out = self_weight ⊙ x + Σ_op op(x)
+
+with ``self_weight`` a scalar or per-node vector (irregular graphs weight
+their own replica differently per node).
+
+Three interpreters share the single compiled program:
+
+  * ``apply_dense``   — dense mixing-matrix einsum over the stacked replica
+                        axis.  The paper-faithful oracle.
+  * ``apply_stacked`` — rolls/gathers over the stacked axis (vmap engine;
+                        under jit on a sharded axis XLA lowers each roll to
+                        collective-permutes).
+  * ``apply_shard``   — explicit collectives inside ``shard_map`` (SPMD
+                        production engine): one ``jax.lax.ppermute`` per
+                        ``PPermute``, ``pmean`` for ``AllReduce``,
+                        all-gather + row contraction for ``GatherRow``.
+
+``compile_graph`` picks the cheapest faithful realization:
+circulant graph → one PPermute per offset; complete graph → AllReduce;
+matching (degree ≤ 1, e.g. one-peer / random pairwise averaging) → a single
+PPermute with per-node weights; anything else → GatherRow.
+
+Programs are frozen/hashable: both engines key their compiled-executable
+caches on the program, so time-varying topologies rotate through a bounded
+executable set — one XLA compile per distinct program at its first use and
+zero recompiles thereafter (``Topology.distinct_programs`` enumerates the
+set up front).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache
+from typing import Any, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:  # jax-version shim (PR 1); degrade gracefully when absent
+    from repro import compat as _compat
+except ImportError:  # pragma: no cover
+    _compat = None
+
+PyTree = Any
+
+__all__ = [
+    "PPermute",
+    "AllReduce",
+    "GatherRow",
+    "GossipProgram",
+    "compile_graph",
+    "dense_program",
+    "identity_program",
+    "permutation_for_offset",
+    "program_comm_bytes",
+]
+
+
+# ---------------------------------------------------------------------------
+# Primitive ops
+# ---------------------------------------------------------------------------
+
+def permutation_for_offset(n: int, d: int) -> tuple[tuple[int, int], ...]:
+    """ppermute pairs so that node i receives from node (i + d) % n."""
+    return tuple(((i + d) % n, i) for i in range(n))
+
+
+@dataclasses.dataclass(frozen=True)
+class PPermute:
+    """Receive one weighted buffer along a permutation.
+
+    perm: (src, dst) pairs; a dst absent from the list receives zeros.
+    weight: scalar, or per-dst-node tuple of length n (applied at receiver).
+    offset: when the perm is the circulant shift ``dst ← dst + offset``,
+      the stacked interpreter uses one ``jnp.roll`` instead of a gather.
+    """
+
+    perm: tuple[tuple[int, int], ...]
+    weight: Union[float, tuple[float, ...]]
+    offset: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class AllReduce:
+    """Uniform average over all nodes (contributes J/n to W)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class GatherRow:
+    """Dense fallback: all-gather replicas, contract with this node's W row.
+
+    w: the full n×n mixing matrix (including the diagonal) as nested tuples.
+    """
+
+    w: tuple[tuple[float, ...], ...]
+
+
+Op = Union[PPermute, AllReduce, GatherRow]
+
+
+# ---------------------------------------------------------------------------
+# The program
+# ---------------------------------------------------------------------------
+
+def _weight_column(weight, n: int) -> np.ndarray:
+    if isinstance(weight, tuple):
+        return np.asarray(weight, dtype=np.float64)
+    return np.full(n, float(weight), dtype=np.float64)
+
+
+def _flat_axis_index(axis_names):
+    """Node index along (possibly multiple) manual mesh axes."""
+    if isinstance(axis_names, str):
+        return jax.lax.axis_index(axis_names)
+    idx = jnp.zeros((), jnp.int32)
+    for a in axis_names:
+        size = (
+            _compat.axis_size(a)
+            if _compat is not None
+            else jax.lax.psum(jnp.ones((), jnp.int32), a)
+        )
+        idx = idx * size + jax.lax.axis_index(a)
+    return idx
+
+
+@dataclasses.dataclass(frozen=True)
+class GossipProgram:
+    """A compiled mixing schedule: out = self_weight ⊙ x + Σ_op op(x)."""
+
+    name: str
+    n: int
+    ops: tuple[Op, ...]
+    self_weight: Union[float, tuple[float, ...]] = 0.0
+
+    # -- views ---------------------------------------------------------------
+    @property
+    def cache_key(self):
+        """Cheap hashable identity for per-executable step caches.
+
+        Computed once per program: dict lookups must not re-hash the op
+        tuple every training step (a GatherRow at n=1008 holds ~1M floats).
+        The sha256 digest of the canonical repr makes collisions across
+        distinct programs practically impossible.
+        """
+        key = self.__dict__.get("_cache_key")
+        if key is None:
+            import hashlib
+
+            digest = hashlib.sha256(
+                repr((self.n, self.ops, self.self_weight)).encode()
+            ).hexdigest()[:32]
+            key = (self.name, self.n, digest)
+            object.__setattr__(self, "_cache_key", key)
+        return key
+
+    @property
+    def is_identity(self) -> bool:
+        return not self.ops
+
+    @property
+    def num_collectives(self) -> int:
+        return len(self.ops)
+
+    def matrix(self) -> np.ndarray:
+        """The dense (n, n) mixing matrix W this program realizes (float64)."""
+        return _program_matrix(self)
+
+    def describe(self) -> str:
+        kinds = [type(op).__name__ for op in self.ops]
+        return f"{self.name}(n={self.n}, ops=[{', '.join(kinds)}])"
+
+    # -- interpreters --------------------------------------------------------
+    def apply(
+        self,
+        tree: PyTree,
+        *,
+        engine: str = "stacked",
+        axis_names=None,
+    ) -> PyTree:
+        """Run one mixing step.
+
+        engine:
+          "dense"   — dense-matrix einsum over leading axis 0 (oracle).
+          "stacked" — rolls/gathers over leading axis 0 (vmap engine).
+          "shard"   — collectives on per-node values inside shard_map;
+                      requires ``axis_names``.
+        """
+        if engine == "dense":
+            return self.apply_dense(tree)
+        if engine == "stacked":
+            return self.apply_stacked(tree)
+        if engine == "shard":
+            if axis_names is None:
+                raise ValueError("engine='shard' requires axis_names")
+            return self.apply_shard(tree, axis_names)
+        raise ValueError(f"unknown engine {engine!r}")
+
+    def apply_dense(self, stacked: PyTree) -> PyTree:
+        """θ ← W θ via the dense matrix (leading axis 0 = node axis)."""
+        if self.is_identity and self.self_weight == 1.0:
+            return stacked
+        w = jnp.asarray(self.matrix(), jnp.float32)
+
+        def _mix(x):
+            return jnp.einsum("ij,j...->i...", w, x.astype(jnp.float32)).astype(
+                x.dtype
+            )
+
+        return jax.tree.map(_mix, stacked)
+
+    def apply_stacked(self, stacked: PyTree) -> PyTree:
+        """Mixing over the stacked node axis via rolls / gathers."""
+        if self.is_identity and self.self_weight == 1.0:
+            return stacked
+        n = self.n
+        sw = jnp.asarray(_weight_column(self.self_weight, n), jnp.float32)
+
+        def _col(v, ndim):
+            return v.reshape((n,) + (1,) * (ndim - 1))
+
+        def _mix(x):
+            xf = x.astype(jnp.float32)
+            acc = _col(sw, x.ndim) * xf
+            for op in self.ops:
+                if isinstance(op, PPermute):
+                    wv = jnp.asarray(_weight_column(op.weight, n), jnp.float32)
+                    if op.offset is not None:
+                        # node i receives from (i + d) % n: roll by -d
+                        acc = acc + _col(wv, x.ndim) * jnp.roll(
+                            xf, -op.offset, axis=0
+                        )
+                    else:
+                        src = np.full(n, 0, dtype=np.int32)
+                        mask = np.zeros(n, dtype=np.float32)
+                        for s, d in op.perm:
+                            src[d] = s
+                            mask[d] = 1.0
+                        gathered = jnp.take(xf, jnp.asarray(src), axis=0)
+                        acc = acc + _col(wv * jnp.asarray(mask), x.ndim) * gathered
+                elif isinstance(op, AllReduce):
+                    acc = acc + jnp.mean(xf, axis=0, keepdims=True)
+                else:  # GatherRow
+                    wm = jnp.asarray(op.w, jnp.float32)
+                    acc = acc + jnp.einsum("ij,j...->i...", wm, xf)
+            return acc.astype(x.dtype)
+
+        return jax.tree.map(_mix, stacked)
+
+    def apply_shard(self, local: PyTree, axis_names) -> PyTree:
+        """Mixing on per-node values inside shard_map (one collective/op)."""
+        if self.is_identity and self.self_weight == 1.0:
+            return local
+        n = self.n
+        per_node_sw = isinstance(self.self_weight, tuple)
+        per_node = per_node_sw or any(
+            isinstance(op, PPermute) and isinstance(op.weight, tuple)
+            for op in self.ops
+        )
+        idx = _flat_axis_index(axis_names) if per_node else None
+
+        def _scalar_here(weight):
+            if isinstance(weight, tuple):
+                return jnp.asarray(weight, jnp.float32)[idx]
+            return jnp.float32(weight)
+
+        def _mix(x):
+            xf = x.astype(jnp.float32)
+            acc = _scalar_here(self.self_weight) * xf
+            for op in self.ops:
+                if isinstance(op, PPermute):
+                    y = jax.lax.ppermute(xf, axis_names, list(op.perm))
+                    acc = acc + _scalar_here(op.weight) * y
+                elif isinstance(op, AllReduce):
+                    acc = acc + jax.lax.pmean(xf, axis_names)
+                else:  # GatherRow
+                    wm = jnp.asarray(op.w, jnp.float32)
+                    row = jax.lax.dynamic_slice_in_dim(
+                        wm, _flat_axis_index(axis_names), 1, 0
+                    )[0]
+                    g = jax.lax.all_gather(xf, axis_names, axis=0, tiled=False)
+                    acc = acc + jnp.einsum("g...,g->...", g, row)
+            return acc.astype(x.dtype)
+
+        return jax.tree.map(_mix, local)
+
+
+@lru_cache(maxsize=512)
+def _program_matrix(program: GossipProgram) -> np.ndarray:
+    n = program.n
+    w = np.diag(_weight_column(program.self_weight, n))
+    for op in program.ops:
+        if isinstance(op, PPermute):
+            wv = _weight_column(op.weight, n)
+            for s, d in op.perm:
+                w[d, s] += wv[d]
+        elif isinstance(op, AllReduce):
+            w += np.ones((n, n)) / n
+        else:  # GatherRow
+            w += np.asarray(op.w, dtype=np.float64)
+    return w
+
+
+# ---------------------------------------------------------------------------
+# Compilation
+# ---------------------------------------------------------------------------
+
+def identity_program(n: int, name: str = "identity") -> GossipProgram:
+    return GossipProgram(name=name, n=n, ops=(), self_weight=1.0)
+
+
+def _matrix_to_tuple(w: np.ndarray) -> tuple[tuple[float, ...], ...]:
+    return tuple(tuple(float(v) for v in row) for row in np.asarray(w))
+
+
+@lru_cache(maxsize=512)
+def dense_program(graph) -> GossipProgram:
+    """The paper-faithful dense realization: one GatherRow of the full W.
+
+    Costs an all-gather of the parameter tree — kept as the faithful
+    baseline (``mixing="dense"``); ``compile_graph`` is the optimized path.
+    Cached: callers look this up every training step, and building the
+    n×n tuple (plus the cache_key digest) is O(n²) host work.
+    """
+    w = graph.mixing_matrix()
+    return GossipProgram(
+        name=f"dense:{graph.name}",
+        n=graph.n,
+        ops=(GatherRow(_matrix_to_tuple(w)),),
+        self_weight=0.0,
+    )
+
+
+def compile_graph(graph_or_sequence):
+    """Compile a graph (or a sequence of graphs) into GossipProgram(s).
+
+    A single ``CommGraph`` yields one program; a sequence (time-varying
+    topology: one graph per step/phase) yields a tuple of programs, one per
+    element — the rotation schedule the engines iterate through.
+    """
+    if isinstance(graph_or_sequence, (list, tuple)):
+        return tuple(_compile_one(g) for g in graph_or_sequence)
+    return _compile_one(graph_or_sequence)
+
+
+@lru_cache(maxsize=512)
+def _compile_one(graph) -> GossipProgram:
+    # Local import: graphs.py ↔ schedule.py would otherwise cycle.
+    from repro.core.graphs import CirculantGraph, EdgeGraph
+
+    n = graph.n
+    if graph.degree == 0 or n <= 1:
+        return identity_program(n, name=graph.name)
+
+    if isinstance(graph, CirculantGraph):
+        if graph.name == "complete" and graph.degree == n - 1:
+            # Uniform complete graph: W = J/n == one ring all-reduce.
+            return GossipProgram(
+                name=graph.name, n=n, ops=(AllReduce(),), self_weight=0.0
+            )
+        ops = tuple(
+            PPermute(permutation_for_offset(n, d), wd, offset=d)
+            for d, wd in graph.weighted_offsets()
+        )
+        return GossipProgram(
+            name=graph.name, n=n, ops=ops, self_weight=graph.self_weight
+        )
+
+    if isinstance(graph, EdgeGraph):
+        w = graph.mixing_matrix()
+        degrees = graph.degrees
+        if max(degrees) <= 1:
+            # A (partial) matching: one permute with per-node weights.
+            perm = []
+            weight = np.zeros(n)
+            for i, j in graph.edges:
+                perm += [(i, j), (j, i)]
+                weight[j] = w[j, i]
+                weight[i] = w[i, j]
+            return GossipProgram(
+                name=graph.name,
+                n=n,
+                ops=(
+                    PPermute(
+                        tuple(sorted(perm, key=lambda p: p[1])),
+                        tuple(float(v) for v in weight),
+                    ),
+                ),
+                self_weight=tuple(float(v) for v in np.diag(w)),
+            )
+        # Irregular graph with no sparse decomposition (yet): dense fallback.
+        return GossipProgram(
+            name=graph.name,
+            n=n,
+            ops=(GatherRow(_matrix_to_tuple(w)),),
+            self_weight=0.0,
+        )
+
+    raise TypeError(f"cannot compile {type(graph).__name__} into a GossipProgram")
+
+
+# ---------------------------------------------------------------------------
+# Cost model
+# ---------------------------------------------------------------------------
+
+def program_comm_bytes(program: GossipProgram, param_bytes: int) -> int:
+    """Bytes each node sends per mixing step under this program."""
+    total = 0.0
+    n = program.n
+    for op in program.ops:
+        if isinstance(op, PPermute):
+            total += param_bytes
+        elif isinstance(op, AllReduce):
+            total += 2 * param_bytes * (n - 1) / n
+        else:  # GatherRow: ring all-gather — each node forwards P to n-1 peers
+            total += param_bytes * (n - 1)
+    return int(total)

@@ -2,20 +2,25 @@
 
 Simulates an n-node (de)centralized data-parallel run on any number of real
 devices by carrying a leading *node axis* on every state leaf and vmapping
-the per-node computation.  Mixing is the dense mixing-matrix product — the
-literal equation of the paper (§2.2) — so this engine is the correctness
-oracle for the SPMD/ppermute production engine.
+the per-node computation.  Mixing interprets the same compiled
+``GossipProgram`` as the SPMD engine — with the dense-matrix interpreter
+(the literal equation of the paper, §2.2) by default, so this engine is the
+correctness oracle for the production engine.
 
 One simulator step:
   1. per-node forward/backward on that node's batch shard   (vmap)
   2. centralized  : all-reduce gradients, identical update everywhere
      decentralized: local optimizer update, then θ ← W θ  (mix_order="post")
   3. optional DBench probe: per-node, per-leaf L2 norms *before* mixing
+
+Time-varying topologies (one-peer exponential, random-matching pools, Ada
+with ``k_floor="one_peer"``) are step-granular: the step function is cached
+per compiled program, so a run compiles each member of a small bounded set
+(``Topology.distinct_programs``) once at first use and never recompiles.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Callable, Iterator, Optional
 
 import jax
@@ -24,12 +29,14 @@ import numpy as np
 
 from repro.core import dbench
 from repro.core.dsgd import Topology
-from repro.core.mixing import mix_dense, mix_shift
+from repro.core.schedule import GossipProgram
 from repro.optim.sgd import Optimizer
 
 PyTree = Any
 
 __all__ = ["SimState", "DecentralizedSimulator"]
+
+_ENGINES = {"dense": "dense", "shift": "stacked", "stacked": "stacked"}
 
 
 @dataclasses.dataclass
@@ -55,7 +62,7 @@ class DecentralizedSimulator:
         optimizer: Optimizer,
         topology: Topology,
         *,
-        mixing: str = "dense",  # "dense" (paper equation) | "shift" (circulant)
+        mixing: str = "dense",  # "dense" (paper equation) | "shift" (stacked)
         mix_every: int = 1,
         collect_norms: bool = False,
         has_rng: bool = False,
@@ -65,8 +72,13 @@ class DecentralizedSimulator:
             arg when ``has_rng``) returning a scalar.
           optimizer: per-node optimizer (state carried per node).
           topology: which SGD implementation to simulate.
-          mixing: dense mixing-matrix product vs circulant-shift realization.
+          mixing: which ``GossipProgram`` interpreter executes W θ — "dense"
+            (paper-faithful matrix product) or "shift" (stacked roll/gather).
         """
+        if mixing not in _ENGINES:
+            raise ValueError(
+                f"mixing must be one of {sorted(_ENGINES)}, got {mixing!r}"
+            )
         self.loss_fn = loss_fn
         self.optimizer = optimizer
         self.topology = topology
@@ -90,9 +102,9 @@ class DecentralizedSimulator:
         return SimState(params=stacked, opt_state=opt, step=0)
 
     # -- one training step ------------------------------------------------------
-    def _build_step(self, graph_key):
-        graph = graph_key  # CommGraph | None (centralized)
-        w = None if graph is None else jnp.asarray(graph.mixing_matrix(), jnp.float32)
+    def _build_step(self, program: Optional[GossipProgram]):
+        """program: compiled mixing schedule; None => pure local update."""
+        engine = _ENGINES[self.mixing]
 
         def step(params, opt_state, batch, lr, rng):
             if self.has_rng:
@@ -124,57 +136,30 @@ class DecentralizedSimulator:
                 )(grads, opt_state, params, lr)
                 return new_params, new_opt, loss, norms
 
-            mix = (
-                (lambda p: mix_dense(p, w))
-                if self.mixing == "dense"
-                else (lambda p: mix_shift(p, graph))
-            )
-            if self.topology.mix_order == "pre":
-                params = mix(params)
+            if program is not None and self.topology.mix_order == "pre":
+                params = program.apply(params, engine=engine)
             new_params, new_opt = jax.vmap(
                 self.optimizer.update, in_axes=(0, 0, 0, None)
             )(grads, opt_state, params, lr)
-            if self.topology.mix_order == "post":
-                new_params = mix(new_params)
+            if program is not None and self.topology.mix_order == "post":
+                new_params = program.apply(new_params, engine=engine)
             return new_params, new_opt, loss, norms
 
         return jax.jit(step)
 
-    def _build_step_local(self):
-        """Pure local update — used between gossip rounds (mix_every > 1)."""
-
-        def step(params, opt_state, batch, lr, rng):
-            if self.has_rng:
-                rngs = jax.random.split(rng, self.n)
-                loss, grads = jax.vmap(jax.value_and_grad(self.loss_fn))(
-                    params, batch, rngs
-                )
-            else:
-                loss, grads = jax.vmap(jax.value_and_grad(self.loss_fn))(
-                    params, batch
-                )
-            norms = (
-                jax.vmap(dbench.param_l2_norms)(params)
-                if self.collect_norms
-                else jnp.zeros((self.n, 0), jnp.float32)
-            )
-            new_params, new_opt = jax.vmap(
-                self.optimizer.update, in_axes=(0, 0, 0, None)
-            )(grads, opt_state, params, lr)
-            return new_params, new_opt, loss, norms
-
-        return jax.jit(step)
-
-    def _step_for_epoch(self, epoch: int, mix: bool = True):
-        graph = self.topology.graph_at(epoch) if (mix or self.topology.centralized) else None
-        if graph is None and not self.topology.centralized:
+    def _step_for(self, step: int, epoch: int, mix: bool = True):
+        """The jitted executable for one iteration, cached per program."""
+        if self.topology.centralized:
+            key = "__centralized__"
+            program = None
+        elif not mix:
             key = "__local__"
-            if key not in self._step_cache:
-                self._step_cache[key] = self._build_step_local()
-            return self._step_cache[key]
-        key = None if graph is None else (graph.name, graph.offsets)
+            program = None
+        else:
+            program = self.topology.program_at(step=step, epoch=epoch)
+            key = program.cache_key if program is not None else "__local__"
         if key not in self._step_cache:
-            self._step_cache[key] = self._build_step(graph)
+            self._step_cache[key] = self._build_step(program)
         return self._step_cache[key]
 
     def train_step(
@@ -194,7 +179,10 @@ class DecentralizedSimulator:
           (new_state, per_node_loss (n,), per_node_norms (n, n_leaves)).
         """
         mix = (state.step + 1) % self.mix_every == 0
-        fn = self._step_for_epoch(epoch, mix=mix)
+        # index time-varying schedules by gossip round (see SPMDTrainer):
+        # raw-step indexing under mix_every=H would alias period-p families
+        # to a single phase whenever p divides H.
+        fn = self._step_for(state.step // self.mix_every, epoch, mix=mix)
         if rng is None:
             rng = jax.random.PRNGKey(0)
         p, o, loss, norms = fn(

@@ -1,28 +1,41 @@
 """SPMD decentralized training engine (the production path).
 
-The train step is a ``jax.shard_map`` manual over the *gossip axes* only;
-the ``model`` axis stays a GSPMD auto axis, so tensor/expert parallelism
-inside a node is driven purely by the parameter in_shardings.  Global state
-is the gossip-stacked tree (leaves ``(G, ...)`` sharded over the gossip
-axes); inside the body each node sees its own replica.
+The train step is a ``shard_map`` manual over the *gossip axes* only; the
+``model`` axis stays a GSPMD auto axis, so tensor/expert parallelism inside
+a node is driven purely by the parameter in_shardings.  Global state is the
+gossip-stacked tree (leaves ``(G, ...)`` sharded over the gossip axes);
+inside the body each node sees its own replica.
+
+Mixing interprets the same compiled ``GossipProgram`` as the simulator
+oracle (``core/schedule.py``): one ``jax.lax.ppermute`` per compiled
+permute, the all-reduce fast path for the complete graph, and the
+paper-faithful dense all-gather realization with ``mixing="dense"`` (the
+program's GatherRow op).  There is no per-engine mixing dispatch — both
+engines call ``GossipProgram.apply``.
 
 Per iteration (paper §2.1 order):
   1. local forward/backward (optionally grad-accumulated over microbatches)
   2. C_complete: ``pmean`` gradients over the gossip axes (all-reduce)
      D_*:        local optimizer update, then gossip parameter averaging
-                 (``mix_ppermute`` schedule, or the paper-faithful dense
-                 all-gather mixing with ``mixing="dense"``)
   3. optional DBench probe: per-leaf L2 norms *before* mixing
 
-Ada is realized by compiling one executable per distinct coordination
-number (a handful per run — see ``AdaSchedule.distinct_graphs``) and
-switching executables at epoch boundaries: graph adaptation costs zero
-mid-step recompiles and zero host sync.
+Time-varying topologies (Ada, one-peer exponential, random-matching pools)
+compile one executable per distinct ``GossipProgram`` — a handful per run,
+enumerable up front via ``Topology.distinct_programs`` — each at its first
+use, and switch cached executables at (epoch, step) boundaries thereafter:
+graph adaptation costs zero recompiles beyond that bounded set and zero
+host sync.
+
+jax-version note: partial-manual shard_map needs the modern manual-axes API
+(``repro/compat.py``).  On old jax (0.4.37 in this container) the trainer
+transparently switches to the *stacked* GSPMD realization — vmap over the
+gossip axis + the program's stacked interpreter, whose rolls XLA lowers to
+collective-permutes on the sharded axis — numerically identical and proven
+against the simulator oracle.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Callable, Optional
 
 import jax
@@ -31,10 +44,14 @@ import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+try:  # jax-version shim (PR 1); degrade gracefully to modern-API-only
+    from repro import compat as _compat
+except ImportError:  # pragma: no cover
+    _compat = None
+
 from repro.core import dbench
 from repro.core.dsgd import Topology
-from repro.core.graphs import CommGraph
-from repro.core.mixing import mix_ppermute
+from repro.core.schedule import GossipProgram, compile_graph, dense_program
 from repro.launch import sharding as shd
 from repro.launch.mesh import gossip_axes_for, gossip_size
 from repro.models import transformer as tfm
@@ -46,6 +63,30 @@ PyTree = Any
 __all__ = ["SPMDTrainer", "TrainState"]
 
 
+def _set_mesh(mesh):
+    if _compat is not None:
+        return _compat.set_mesh(mesh)
+    return jax.set_mesh(mesh)
+
+
+def _has_manual_axes() -> bool:
+    if _compat is not None:
+        return _compat.HAS_MANUAL_AXES_API
+    return hasattr(jax, "shard_map")
+
+
+def _shard_map(f, *, mesh, in_specs, out_specs, axis_names):
+    if _compat is not None:
+        return _compat.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            axis_names=axis_names, check_vma=False,
+        )
+    return jax.shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        axis_names=axis_names, check_vma=False,
+    )
+
+
 @dataclasses.dataclass
 class TrainState:
     params: PyTree
@@ -53,22 +94,20 @@ class TrainState:
     step: int = 0
 
 
-def _mix_dense_allgather(new_p: PyTree, graph: CommGraph, axes) -> PyTree:
-    """Paper-faithful dense mixing: gather all replicas, multiply by W-row.
+class _LazyStep:
+    """Defers the jit/shard_map build until concrete batch shapes arrive."""
 
-    Costs an all-gather of the full parameter tree over the gossip axes —
-    kept as the *faithful baseline* for §Perf (the paper mixes with a dense
-    adjacency matrix; sparsity-aware schedules are our optimization).
-    """
-    w = jnp.asarray(graph.mixing_matrix(), jnp.float32)
-    idx = jax.lax.axis_index(axes)
-    row = jax.lax.dynamic_slice_in_dim(w, idx, 1, 0)[0]  # (G,)
+    def __init__(self, build):
+        self._build = build
+        self._fn = None
 
-    def _mix(x):
-        g = jax.lax.all_gather(x.astype(jnp.float32), axes, axis=0, tiled=False)
-        return jnp.einsum("g...,g->...", g, row).astype(x.dtype)
+    def __call__(self, params, opt_state, batch, lr):
+        if self._fn is None:
+            self._fn = self._build(batch)
+        return self._fn(params, opt_state, batch, lr)
 
-    return jax.tree.map(_mix, new_p)
+    def lower(self, params, opt_state, batch, lr):
+        return self._build(batch).lower(params, opt_state, batch, lr)
 
 
 class SPMDTrainer:
@@ -84,7 +123,7 @@ class SPMDTrainer:
         loss_fn: Optional[Callable] = None,
         accum_steps: int = 1,
         collect_norms: bool = False,
-        mixing: str = "ppermute",  # ppermute | dense
+        mixing: str = "ppermute",  # ppermute (compiled program) | dense
         mix_every: int = 1,
         donate: bool = True,
     ):
@@ -93,6 +132,8 @@ class SPMDTrainer:
         late-stage connectivity is nearly free to drop).  The non-mixing
         step compiles separately, so the H−1 local steps carry zero gossip
         collectives."""
+        if mixing not in ("ppermute", "dense"):
+            raise ValueError(f"mixing must be 'ppermute'|'dense', got {mixing!r}")
         self.cfg = cfg
         self.mesh = mesh
         self.topology = topology
@@ -109,11 +150,41 @@ class SPMDTrainer:
                 f"topology has {topology.n_nodes} nodes but mesh gossip axes "
                 f"{self.gossip_axes} give {self.g}"
             )
+        # Partial-manual shard_map (manual gossip × auto model) needs the
+        # modern manual-axes API; otherwise run the stacked GSPMD engine.
+        self.use_shard_map = self.g > 1 and _has_manual_axes()
         tp = mesh.shape.get("model", 1)
         self.defs = tfm.model_defs(cfg, tp_size=tp)
         self.loss_fn = loss_fn or (lambda p, b: tfm.loss_fn(p, cfg, b))
         self._step_cache: dict[Any, Any] = {}
         self._build_shardings()
+
+    # -- mixing program -------------------------------------------------------
+    def _program_at(self, step: int, epoch: int) -> Optional[GossipProgram]:
+        graph = self.topology.graph_at(epoch, step)
+        if graph is None:
+            return None
+        if self.mixing == "dense":
+            return dense_program(graph)
+        return compile_graph(graph)
+
+    def precompile_programs(self, n_epochs: int = 1) -> list[GossipProgram]:
+        """Enumerate every distinct program a run will rotate through.
+
+        This compiles the mixing *programs* (the IR), not the XLA
+        executables — each step executable is jitted once at its first use
+        and cached by program key; this method bounds and reports that set.
+        """
+        if self.topology.centralized:
+            return []
+        progs = []
+        seen = set()
+        for (e, s), _ in self.topology.distinct_programs(n_epochs):
+            p = self._program_at(s, e)
+            if p is not None and p.cache_key not in seen:
+                seen.add(p.cache_key)
+                progs.append(p)
+        return progs
 
     # -- shardings -----------------------------------------------------------
     def _build_shardings(self):
@@ -157,39 +228,40 @@ class SPMDTrainer:
                 )
             return p, o
 
-        with jax.set_mesh(self.mesh):
+        with _set_mesh(self.mesh):
             p, o = jax.jit(
                 _init, out_shardings=(self.param_shardings, self.opt_shardings)
             )(key)
         return TrainState(p, o, 0)
 
-    # -- the node-level step -----------------------------------------------------
-    def _node_step(self, graph: Optional[CommGraph]):
+    # -- per-node grads (shared by both realizations) ----------------------------
+    def _grads_of(self, params, batch):
+        accum = self.accum_steps
+        if accum == 1:
+            return jax.value_and_grad(self.loss_fn)(params, batch)
+        micro = jax.tree.map(
+            lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]), batch
+        )
+
+        def acc_body(carry, mb):
+            l, g = jax.value_and_grad(self.loss_fn)(params, mb)
+            return (
+                carry[0] + l / accum,
+                jax.tree.map(lambda a, b: a + b / accum, carry[1], g),
+            ), None
+
+        zero = (
+            jnp.zeros((), jnp.float32),
+            jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        )
+        (loss, grads), _ = jax.lax.scan(acc_body, zero, micro)
+        return loss, grads
+
+    # -- the node-level step (shard_map realization) ------------------------------
+    def _node_step(self, program: Optional[GossipProgram]):
         topo = self.topology
         opt = self.optimizer
-        accum = self.accum_steps
         axes = self.gossip_axes
-
-        def grads_of(params, batch):
-            if accum == 1:
-                return jax.value_and_grad(self.loss_fn)(params, batch)
-            micro = jax.tree.map(
-                lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]), batch
-            )
-
-            def acc_body(carry, mb):
-                l, g = jax.value_and_grad(self.loss_fn)(params, mb)
-                return (
-                    carry[0] + l / accum,
-                    jax.tree.map(lambda a, b: a + b / accum, carry[1], g),
-                ), None
-
-            zero = (
-                jnp.zeros((), jnp.float32),
-                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
-            )
-            (loss, grads), _ = jax.lax.scan(acc_body, zero, micro)
-            return loss, grads
 
         def node_step(params_st, opt_st, batch_st, lr):
             squeeze = self.g > 1
@@ -197,7 +269,7 @@ class SPMDTrainer:
             opt_state = jax.tree.map(lambda x: x[0], opt_st) if squeeze else opt_st
             batch = jax.tree.map(lambda x: x[0], batch_st) if squeeze else batch_st
 
-            loss, grads = grads_of(params, batch)
+            loss, grads = self._grads_of(params, batch)
             norms = (
                 dbench.param_l2_norms(params)
                 if self.collect_norms
@@ -206,11 +278,11 @@ class SPMDTrainer:
 
             if topo.centralized and self.g > 1:
                 grads = jax.tree.map(lambda g: jax.lax.pmean(g, axes), grads)
-            if topo.mix_order == "pre" and graph is not None and self.g > 1:
-                params = self._mix(params, graph)
+            if topo.mix_order == "pre" and program is not None and self.g > 1:
+                params = program.apply_shard(params, axes)
             new_p, new_o = opt.update(grads, opt_state, params, lr)
-            if topo.mix_order == "post" and graph is not None and self.g > 1:
-                new_p = self._mix(new_p, graph)
+            if topo.mix_order == "post" and program is not None and self.g > 1:
+                new_p = program.apply_shard(new_p, axes)
 
             if squeeze:
                 new_p = jax.tree.map(lambda x: x[None], new_p)
@@ -221,95 +293,145 @@ class SPMDTrainer:
 
         return node_step
 
-    def _mix(self, params, graph):
-        if self.mixing == "dense":
-            return _mix_dense_allgather(params, graph, self.gossip_axes)
-        return mix_ppermute(params, graph, self.gossip_axes)
+    # -- the stacked step (GSPMD realization; old-jax fallback) -------------------
+    def _stacked_step(self, program: Optional[GossipProgram]):
+        """vmap over the gossip axis + the program's stacked interpreter.
 
-    # -- jitted step per graph ------------------------------------------------------
+        Numerically identical to the shard_map realization; on a mesh whose
+        gossip axes shard the leading dim, XLA lowers the program's rolls to
+        collective-permutes (and the GatherRow einsum to an all-gather).
+        """
+        topo = self.topology
+        opt = self.optimizer
+
+        def stacked_step(params, opt_state, batch, lr):
+            loss, grads = jax.vmap(self._grads_of)(params, batch)
+            norms = (
+                jax.vmap(dbench.param_l2_norms)(params)
+                if self.collect_norms
+                else jnp.zeros((self.g, 0), jnp.float32)
+            )
+            if topo.centralized:
+                grads = jax.tree.map(
+                    lambda g: jnp.broadcast_to(
+                        g.mean(axis=0, keepdims=True), g.shape
+                    ),
+                    grads,
+                )
+            if topo.mix_order == "pre" and program is not None:
+                params = program.apply_stacked(params)
+            new_p, new_o = jax.vmap(opt.update, in_axes=(0, 0, 0, None))(
+                grads, opt_state, params, lr
+            )
+            if topo.mix_order == "post" and program is not None:
+                new_p = program.apply_stacked(new_p)
+            return new_p, new_o, loss, norms
+
+        return stacked_step
+
+    # -- jitted step per program ----------------------------------------------
     def step_fn(self, epoch: int = 0, batch_abstract: Optional[PyTree] = None,
-                *, mix: bool = True):
-        graph = self.topology.graph_at(epoch) if mix else None
+                *, step: int = 0, mix: bool = True):
+        program = self._program_at(step, epoch) if mix else None
         if not mix and self.topology.centralized:
             raise ValueError("mix_every > 1 is a decentralized-only feature")
-        key = None if graph is None else (graph.name, graph.offsets)
+        key = None if program is None else program.cache_key
         if key in self._step_cache:
             return self._step_cache[key]
 
-        node_step = self._node_step(graph)
         gspec = P(self.gossip_axes) if self.gossip_axes else P()
         if self.g == 1:
-            fn = jax.jit(node_step, donate_argnums=(0, 1) if self.donate else ())
+            fn = jax.jit(
+                self._node_step(program),
+                donate_argnums=(0, 1) if self.donate else (),
+            )
             self._step_cache[key] = fn
             return fn
+
         lead = lambda nd: P(self.gossip_axes, *([None] * nd))
         in_specs = (
             jax.tree.map(lambda l: lead(len(l.shape) - 1), self.abstract_state[0]),
             jax.tree.map(lambda l: lead(len(l.shape) - 1), self.abstract_state[1]),
         )
 
-        def build(batch_tree):
-            batch_specs = jax.tree.map(
-                lambda x: lead(len(x.shape) - 1), batch_tree
-            )
-            mapped = jax.shard_map(
-                node_step,
-                mesh=self.mesh,
-                in_specs=(in_specs[0], in_specs[1], batch_specs, P()),
-                out_specs=(in_specs[0], in_specs[1], gspec, gspec),
-                axis_names=set(self.gossip_axes),
-                check_vma=False,
-            )
-            return jax.jit(
-                mapped,
-                in_shardings=(
-                    self.param_shardings,
-                    self.opt_shardings,
-                    jax.tree.map(
-                        lambda x: shd.batch_sharding(
-                            self.mesh, self.gossip_axes, len(x.shape), stacked=True
-                        ),
-                        batch_tree,
+        def shardings_for(batch_tree):
+            return (
+                self.param_shardings,
+                self.opt_shardings,
+                jax.tree.map(
+                    lambda x: shd.batch_sharding(
+                        self.mesh, self.gossip_axes, len(x.shape), stacked=True
                     ),
-                    NamedSharding(self.mesh, P()),
+                    batch_tree,
                 ),
-                out_shardings=(
-                    self.param_shardings,
-                    self.opt_shardings,
-                    NamedSharding(self.mesh, gspec),
-                    NamedSharding(self.mesh, gspec),
-                ),
-                donate_argnums=(0, 1) if self.donate else (),
+                NamedSharding(self.mesh, P()),
             )
 
-        class _LazyStep:
-            def __init__(self, build_):
-                self._build = build_
-                self._fn = None
+        if self.use_shard_map:
+            node_step = self._node_step(program)
 
-            def __call__(self, params, opt_state, batch, lr):
-                if self._fn is None:
-                    self._fn = self._build(batch)
-                return self._fn(params, opt_state, batch, lr)
+            def build(batch_tree):
+                batch_specs = jax.tree.map(
+                    lambda x: lead(len(x.shape) - 1), batch_tree
+                )
+                mapped = _shard_map(
+                    node_step,
+                    mesh=self.mesh,
+                    in_specs=(in_specs[0], in_specs[1], batch_specs, P()),
+                    out_specs=(in_specs[0], in_specs[1], gspec, gspec),
+                    axis_names=set(self.gossip_axes),
+                )
+                return jax.jit(
+                    mapped,
+                    in_shardings=shardings_for(batch_tree),
+                    out_shardings=(
+                        self.param_shardings,
+                        self.opt_shardings,
+                        NamedSharding(self.mesh, gspec),
+                        NamedSharding(self.mesh, gspec),
+                    ),
+                    donate_argnums=(0, 1) if self.donate else (),
+                )
 
-            def lower(self, params, opt_state, batch, lr):
-                return self._build(batch).lower(params, opt_state, batch, lr)
+        else:
+            stacked_step = self._stacked_step(program)
 
-        step = _LazyStep(build)
-        self._step_cache[key] = step
-        return step
+            def build(batch_tree):
+                return jax.jit(
+                    stacked_step,
+                    in_shardings=shardings_for(batch_tree),
+                    out_shardings=(
+                        self.param_shardings,
+                        self.opt_shardings,
+                        NamedSharding(self.mesh, gspec),
+                        NamedSharding(self.mesh, gspec),
+                    ),
+                    donate_argnums=(0, 1) if self.donate else (),
+                )
+
+        fn = _LazyStep(build)
+        self._step_cache[key] = fn
+        return fn
 
     # -- public API ------------------------------------------------------------------
     def train_step(self, state: TrainState, batch: PyTree, lr: float, *, epoch: int = 0):
         mix = (state.step + 1) % self.mix_every == 0
-        fn = self.step_fn(epoch, mix=mix or self.topology.centralized)
-        with jax.set_mesh(self.mesh):
+        # Time-varying schedules advance per *gossip round*, not per raw
+        # step: with mix_every=H only every H-th step mixes, and indexing by
+        # raw step would alias a period-p family to the single phase
+        # H-1 mod p whenever p | H (e.g. one-peer n=16 with H=4 would gossip
+        # hop 8 forever, splitting the network into isolated pairs).
+        fn = self.step_fn(
+            epoch, step=state.step // self.mix_every,
+            mix=mix or self.topology.centralized,
+        )
+        with _set_mesh(self.mesh):
             p, o, loss, norms = fn(
                 state.params, state.opt_state, batch, jnp.float32(lr)
             )
         return TrainState(p, o, state.step + 1), loss, norms
 
-    def lower_step(self, shape, *, epoch: int = 0):
+    def lower_step(self, shape, *, epoch: int = 0, step: int = 0):
         """Abstract lowering for the dry-run: ShapeDtypeStructs only."""
         from repro.configs.base import input_specs
 
@@ -319,13 +441,13 @@ class SPMDTrainer:
             batch = {
                 k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in batch.items()
             }
-        fn = self.step_fn(epoch)
+        fn = self.step_fn(epoch, step=step)
         p_abs, o_abs = self.abstract_state
         lr = jax.ShapeDtypeStruct((), jnp.float32)
-        with jax.set_mesh(self.mesh):
+        with _set_mesh(self.mesh):
             if self.g == 1:
                 lowered = jax.jit(
-                    self._node_step(self.topology.graph_at(epoch)),
+                    self._node_step(self._program_at(step, epoch)),
                     in_shardings=(
                         self.param_shardings,
                         self.opt_shardings,
@@ -364,6 +486,9 @@ def main() -> None:
     ap.add_argument("--topology", default="d_ada")
     ap.add_argument("--mixing", default="ppermute", choices=["ppermute", "dense"])
     ap.add_argument("--mix-every", type=int, default=1)
+    ap.add_argument("--k-floor", default="2",
+                    help="Ada decay floor: an int, or 'one_peer' for the "
+                         "time-varying one-peer exponential family")
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--steps-per-epoch", type=int, default=10)
     ap.add_argument("--seq", type=int, default=64)
@@ -398,12 +523,24 @@ def main() -> None:
 
     cfg = dataclasses.replace(cfg, name=args.arch)  # keep gossip placement
     g = shape[0]
-    topo = make_topology(args.topology, g)
+    if args.k_floor == "one_peer":
+        k_floor = "one_peer"
+    else:
+        try:
+            k_floor = int(args.k_floor)
+        except ValueError:
+            raise SystemExit(
+                f"--k-floor must be an integer or 'one_peer', got {args.k_floor!r}"
+            )
+    topo = make_topology(args.topology, g, k_floor=k_floor)
     trainer = SPMDTrainer(
         cfg, mesh, topo, get_optimizer(args.optimizer), collect_norms=True,
         mixing=args.mixing, mix_every=args.mix_every, donate=False,
     )
-    print(topo.describe(), "| mesh", dict(mesh.shape), "| mixing", args.mixing)
+    print(topo.describe(), "| mesh", dict(mesh.shape), "| mixing", args.mixing,
+          "| engine", "shard_map" if trainer.use_shard_map else "stacked")
+    n_progs = len(trainer.precompile_programs(args.steps // args.steps_per_epoch + 1))
+    print(f"{n_progs} distinct mixing program(s) over the run")
     state = trainer.init_state(jax.random.PRNGKey(0))
     src = SyntheticLM(vocab=cfg.vocab, seq_len=args.seq, seed=0)
     scale = lr_scale(
@@ -416,7 +553,7 @@ def main() -> None:
         epoch = t // args.steps_per_epoch
         state, loss, norms = trainer.train_step(state, batch, args.lr * scale, epoch=epoch)
         if t % 5 == 0 or t == args.steps - 1:
-            print(f"step {t:4d} k={topo.degree_at(epoch)} loss={float(loss.mean()):.4f} "
+            print(f"step {t:4d} k={topo.degree_at(epoch, t)} loss={float(loss.mean()):.4f} "
                   f"spread={float(loss.max() - loss.min()):.4f}")
         if args.ckpt_dir and args.ckpt_every and (t + 1) % args.ckpt_every == 0:
             from repro.checkpoint import save_checkpoint

@@ -1,0 +1,136 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+The container cannot ``pip install``; this shim implements the small slice
+of the hypothesis API the test-suite uses (``given``, ``settings``, and the
+``integers`` / ``floats`` / ``sampled_from`` / ``booleans`` / ``tuples`` /
+``lists`` strategies) as deterministic seeded random sampling.  It is
+registered by ``tests/conftest.py`` via ``sys.modules`` only when the real
+package is missing, so installing hypothesis transparently upgrades the
+suite to real property testing.
+
+Not a property-based tester: no shrinking, no coverage-guided generation —
+just ``max_examples`` deterministic draws per test (seeded from the test
+name, so failures reproduce).
+"""
+from __future__ import annotations
+
+import functools
+import hashlib
+import inspect
+import random
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value=None, max_value=None) -> _Strategy:
+    lo = -(2**31) if min_value is None else int(min_value)
+    hi = 2**31 if max_value is None else int(max_value)
+    return _Strategy(lambda rng: rng.randint(lo, hi))
+
+
+def floats(
+    min_value=None,
+    max_value=None,
+    allow_nan: bool = False,
+    allow_infinity: bool = False,
+    width: int = 64,
+) -> _Strategy:
+    lo = -1e9 if min_value is None else float(min_value)
+    hi = 1e9 if max_value is None else float(max_value)
+
+    def draw(rng):
+        v = rng.uniform(lo, hi)
+        # nudge endpoint draws inward so strict bounds stay honest
+        return min(max(v, lo), hi)
+
+    return _Strategy(draw)
+
+
+def sampled_from(elements) -> _Strategy:
+    elems = list(elements)
+    if not elems:
+        raise ValueError("sampled_from needs a non-empty collection")
+    return _Strategy(lambda rng: elems[rng.randrange(len(elems))])
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def tuples(*strategies) -> _Strategy:
+    return _Strategy(lambda rng: tuple(s.draw(rng) for s in strategies))
+
+
+def lists(elements, *, min_size=0, max_size=10) -> _Strategy:
+    def draw(rng):
+        k = rng.randint(min_size, max_size)
+        return [elements.draw(rng) for _ in range(k)]
+
+    return _Strategy(draw)
+
+
+def just(value) -> _Strategy:
+    return _Strategy(lambda rng: value)
+
+
+class _Settings:
+    def __init__(self, max_examples: int = 20, deadline=None, **_ignored):
+        self.max_examples = max_examples
+        self.deadline = deadline
+
+    def __call__(self, fn):
+        fn._fallback_settings = self
+        return fn
+
+
+settings = _Settings
+
+
+def given(*strategies, **kw_strategies):
+    """Run the test with ``max_examples`` deterministic seeded draws."""
+
+    def decorate(fn):
+        cfg = getattr(fn, "_fallback_settings", None) or _Settings()
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            seed0 = int.from_bytes(
+                hashlib.sha256(fn.__qualname__.encode()).digest()[:8], "big"
+            )
+            for i in range(max(int(cfg.max_examples), 1)):
+                rng = random.Random(seed0 + i)
+                drawn = tuple(s.draw(rng) for s in strategies)
+                drawn_kw = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                try:
+                    fn(*args, *drawn, **drawn_kw, **kwargs)
+                except Exception as e:  # re-raise with the failing example
+                    raise AssertionError(
+                        f"falsifying example (draw {i}): args={drawn} "
+                        f"kwargs={drawn_kw}: {e}"
+                    ) from e
+
+        # pytest must not treat the drawn parameters as fixtures: hide the
+        # wrapped signature (wraps() copies __wrapped__, which pytest follows).
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        wrapper.hypothesis_fallback = True
+        return wrapper
+
+    return decorate
+
+
+class strategies:  # namespace mirror: ``from hypothesis import strategies as st``
+    integers = staticmethod(integers)
+    floats = staticmethod(floats)
+    sampled_from = staticmethod(sampled_from)
+    booleans = staticmethod(booleans)
+    tuples = staticmethod(tuples)
+    lists = staticmethod(lists)
+    just = staticmethod(just)

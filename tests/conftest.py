@@ -7,6 +7,17 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# hypothesis is not installed in the container (and pip install is not
+# allowed): register the deterministic sampling shim under the same name.
+try:  # pragma: no cover
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_fallback
+
+    sys.modules["hypothesis"] = _hypothesis_fallback
+    sys.modules["hypothesis.strategies"] = _hypothesis_fallback.strategies
+
 import jax  # noqa: E402
 
 jax.config.update("jax_default_matmul_precision", "highest")

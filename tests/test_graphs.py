@@ -116,3 +116,78 @@ def test_metropolis_rejects_directed():
     g = make_graph("exponential", 16)
     with pytest.raises(ValueError):
         g.mixing_matrix("metropolis")
+
+
+# ---------------------------------------------------------------------------
+# Torus degree regression: every factorization up to n=64
+# ---------------------------------------------------------------------------
+
+def _torus_reference_w(a: int, b: int) -> np.ndarray:
+    """Independent multigraph construction of the twisted-torus W.
+
+    Row neighbors via the flat ring (offsets ±1), column neighbors via ±b on
+    the grid; parallel edges (the a == 2 column wrap) accumulate weight.
+    Uniform Algorithm-1 weights: 1/5 per unit edge on the 4-regular torus.
+    """
+    n = a * b
+    w = np.zeros((n, n))
+    for i in range(n):
+        w[i, (i + 1) % n] += 1 / 5
+        w[i, (i - 1) % n] += 1 / 5
+        r, c = divmod(i, b)
+        w[i, ((r + 1) % a) * b + c] += 1 / 5
+        w[i, ((r - 1) % a) * b + c] += 1 / 5
+    np.fill_diagonal(w, 1 / 5)
+    return w
+
+
+def test_torus_degree_every_factorization_up_to_64():
+    """a == 2 grids (e.g. n=8, grid=(2,4)): offsets b and n-b collide; the
+    offset must carry multiplicity 2 (weight 2/5), keeping the torus
+    4-regular with row sums 1 — not silently degree-3 with 1/4 weights."""
+    for n in range(6, 65):
+        for a in range(2, n):
+            if n % a:
+                continue
+            b = n // a
+            if b < 2:
+                continue
+            g = Torus(n, grid=(a, b))
+            w = g.mixing_matrix()
+            assert g.degree == 4, (n, a, b, g.degree)
+            assert g.num_edges == 2 * n, (n, a, b)
+            assert np.allclose(w.sum(axis=1), 1.0), (n, a, b)
+            assert np.allclose(w, w.T), (n, a, b)
+            np.testing.assert_allclose(
+                w, _torus_reference_w(a, b), atol=1e-12,
+                err_msg=f"n={n} grid=({a},{b})",
+            )
+            if a == 2:
+                # the doubled column edge carries exactly 2/5
+                assert np.isclose(w[0, b], 2 / 5), (n, a, b, w[0, b])
+
+
+# ---------------------------------------------------------------------------
+# Circulant spectral-gap fast path (DFT of the weight vector)
+# ---------------------------------------------------------------------------
+
+@given(st.sampled_from(["ring", "torus", "ring_lattice", "exponential",
+                        "complete", "one_peer_exponential"]),
+       st.integers(min_value=2, max_value=48))
+@settings(max_examples=40, deadline=None)
+def test_spectral_gap_fast_path_matches_dense(kind, n):
+    g = make_graph(kind, n, k=4)
+    fast = spectral_gap(g)
+    eig = np.linalg.eigvals(g.mixing_matrix())
+    mags = np.sort(np.abs(eig))[::-1]
+    dense = 1.0 - mags[1] if n > 1 else 1.0
+    assert abs(fast - dense) < 1e-9, (kind, n, fast, dense)
+
+
+def test_spectral_gap_exact_at_paper_scale():
+    """n=1008 (the paper's largest run): exact gaps via the DFT fast path."""
+    gaps = {k: spectral_gap(make_graph(k, 1008))
+            for k in ("ring", "torus", "exponential", "complete")}
+    assert all(np.isfinite(v) for v in gaps.values())
+    assert gaps["ring"] < gaps["torus"] < gaps["exponential"] <= gaps["complete"]
+    assert abs(gaps["complete"] - 1.0) < 1e-9

@@ -1,0 +1,315 @@
+"""The mixing-program IR: compiled programs == dense oracle on every
+registered topology, program structure (one collective-permute per circulant
+offset, all-reduce for complete, no dense fallback on sparse graphs), and
+stochasticity properties of every mixing matrix."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.ada import AdaSchedule
+from repro.core.dsgd import make_topology
+from repro.core.graphs import (
+    Complete, Exponential, Ring, RingLattice, Star, Torus, from_adjacency,
+    make_graph, one_peer_exponential, one_peer_period, random_matching,
+)
+from repro.core.schedule import (
+    AllReduce, GatherRow, GossipProgram, PPermute, compile_graph,
+    dense_program, identity_program, program_comm_bytes,
+)
+
+
+def _all_graphs(n: int):
+    """One instance of every registered topology family at size n."""
+    gs = [
+        Ring(n),
+        Torus(n),
+        RingLattice(n, 4),
+        Exponential(n),
+        Complete(n),
+        Star(n),
+        random_matching(n, seed=7),
+        random_matching(max(n - 1, 2), seed=7),  # odd n: one node idles
+        from_adjacency(
+            [(0, 1), (1, 2), (2, 3), (0, 3), (0, 2)], name="irregular"
+        ),
+    ]
+    gs += [one_peer_exponential(n, t) for t in range(one_peer_period(n))]
+    return gs
+
+
+# ---------------------------------------------------------------------------
+# Compiled program == dense mixing-matrix oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [4, 8, 12])
+def test_program_interpreters_match_dense_oracle(n):
+    """For every topology the compiled program agrees with W θ to <= 1e-5
+    under both the dense and the stacked interpreter."""
+    rng = np.random.default_rng(0)
+    for g in _all_graphs(n):
+        prog = compile_graph(g)
+        x = jnp.asarray(rng.normal(size=(g.n, 3, 2)).astype(np.float32))
+        tree = {"a": x, "b": x[:, 0]}
+        want = {
+            k: np.einsum("ij,j...->i...", g.mixing_matrix(), np.asarray(v))
+            for k, v in tree.items()
+        }
+        for engine in ("dense", "stacked"):
+            got = prog.apply(tree, engine=engine)
+            for k in tree:
+                np.testing.assert_allclose(
+                    np.asarray(got[k]), want[k], atol=1e-5,
+                    err_msg=f"{g.name} engine={engine} leaf={k}",
+                )
+        # program's own matrix view is exact
+        np.testing.assert_allclose(prog.matrix(), g.mixing_matrix(), atol=1e-12)
+        # the dense (GatherRow) realization is the same matrix
+        np.testing.assert_allclose(
+            dense_program(g).matrix(), g.mixing_matrix(), atol=1e-12
+        )
+
+
+def test_one_peer_full_cycle_mixes_toward_consensus():
+    """A full one-peer cycle (p steps, degree 1 each) contracts the spread;
+    repeated cycles reach consensus and always preserve the replica mean."""
+    n = 16
+    p = one_peer_period(n)
+    x = np.random.default_rng(1).normal(size=(n, 3)).astype(np.float32)
+    y = jnp.asarray(x)
+    for cycle in range(8):
+        for t in range(p):
+            y = compile_graph(one_peer_exponential(n, t)).apply_stacked(y)
+    np.testing.assert_allclose(
+        np.asarray(y.mean(0)), x.mean(0), atol=1e-4
+    )  # doubly stochastic: mean preserved
+    spread = float(jnp.abs(y - y.mean(0)).max())
+    assert spread < 1e-3, spread
+
+
+def test_seeded_random_matching_is_deterministic_and_rotates():
+    a = random_matching(10, seed=3, round=2)
+    b = random_matching(10, seed=3, round=2)
+    c = random_matching(10, seed=3, round=3)
+    assert a.edges == b.edges
+    assert a.edges != c.edges
+    assert compile_graph(a).cache_key == compile_graph(b).cache_key
+
+
+# ---------------------------------------------------------------------------
+# Program structure: the optimized lowering the IR promises
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["ring", "torus", "exponential", "ring_lattice"])
+def test_circulant_compiles_to_one_permute_per_offset(kind):
+    """No all-gather regression: a circulant graph is exactly one PPermute
+    per offset — nothing else."""
+    g = make_graph(kind, 12, k=4)
+    prog = compile_graph(g)
+    assert all(isinstance(op, PPermute) for op in prog.ops)
+    assert len(prog.ops) == len(g.offsets)
+    offsets = sorted(op.offset for op in prog.ops)
+    assert offsets == sorted(g.offsets)
+
+
+def test_complete_compiles_to_single_allreduce():
+    prog = compile_graph(Complete(12))
+    assert prog.ops == (AllReduce(),)
+
+
+def test_matchings_compile_to_single_permute_with_per_node_weights():
+    for n in (8, 9):  # even: perfect matching; odd: one idle node
+        g = random_matching(n, seed=1)
+        prog = compile_graph(g)
+        assert len(prog.ops) == 1 and isinstance(prog.ops[0], PPermute)
+        assert isinstance(prog.self_weight, tuple)
+    prog = compile_graph(one_peer_exponential(8, 2))
+    assert len(prog.ops) == 1 and isinstance(prog.ops[0], PPermute)
+
+
+def test_irregular_graph_falls_back_to_gather_row():
+    g = Star(8)
+    prog = compile_graph(g)
+    assert len(prog.ops) == 1 and isinstance(prog.ops[0], GatherRow)
+    np.testing.assert_allclose(prog.matrix(), g.mixing_matrix())
+
+
+def test_identity_program_is_noop():
+    prog = identity_program(4)
+    x = {"w": jnp.arange(8.0).reshape(4, 2)}
+    for engine in ("dense", "stacked"):
+        np.testing.assert_array_equal(
+            np.asarray(prog.apply(x, engine=engine)["w"]), np.asarray(x["w"])
+        )
+    assert program_comm_bytes(prog, 1000) == 0
+
+
+def test_programs_are_hashable_cache_keys():
+    a = compile_graph(Ring(8))
+    b = compile_graph(Ring(8))
+    c = compile_graph(Ring(12))
+    assert a.cache_key == b.cache_key and hash(a) == hash(b)
+    assert a.cache_key != c.cache_key
+    assert len({a, b, c}) == 2
+
+
+# ---------------------------------------------------------------------------
+# Stochasticity properties over every family
+# ---------------------------------------------------------------------------
+
+@given(st.integers(min_value=2, max_value=24), st.integers(min_value=0, max_value=10))
+@settings(max_examples=30, deadline=None)
+def test_all_mixing_matrices_row_stochastic(n, salt):
+    """Every registered topology is row-stochastic and nonnegative; undirected
+    (and permutation-based one-peer) graphs are doubly stochastic."""
+    graphs = [
+        Ring(n), Torus(n), RingLattice(n, 2 + salt % 6), Exponential(n),
+        Complete(n), Star(n), random_matching(n, seed=salt),
+        one_peer_exponential(n, salt),
+    ]
+    for g in graphs:
+        w = g.mixing_matrix()
+        assert np.allclose(w.sum(axis=1), 1.0), g.name
+        assert (w >= -1e-12).all(), g.name
+        if g.is_symmetric:
+            assert np.allclose(w, w.T), g.name
+        if not g.directed or g.name.startswith("one_peer"):
+            assert np.allclose(w.sum(axis=0), 1.0), (g.name, "doubly")
+        # the compiled program realizes exactly this matrix
+        np.testing.assert_allclose(
+            compile_graph(g).matrix(), w, atol=1e-12, err_msg=g.name
+        )
+
+
+# ---------------------------------------------------------------------------
+# Topology-level program schedules
+# ---------------------------------------------------------------------------
+
+def test_topology_program_rotation_counts():
+    topo = make_topology("d_one_peer_exp", 16)
+    progs = topo.distinct_programs(1)
+    assert len(progs) == one_peer_period(16) == 4
+    # step t uses program t mod p — zero recompiles over a long run
+    keys = {topo.program_at(step=t).cache_key for t in range(64)}
+    assert keys == {p.cache_key for _, p in progs}
+
+    pool = make_topology("d_random_matching", 16, seed=2, pool=5)
+    assert len(pool.distinct_programs(1)) == 5
+    assert (
+        pool.program_at(step=7).cache_key == pool.program_at(step=12).cache_key
+    )
+
+
+def test_ada_one_peer_floor_schedule():
+    s = AdaSchedule(n_nodes=16, k0=4, gamma_k=1.0, k_floor="one_peer")
+    assert not s.one_peer_at(0) and s.one_peer_at(3)
+    assert s.k_at(3) == 1  # one peer per step
+    names = {p.name for _, p in s.distinct_programs(6)}
+    assert any(n.startswith("one_peer_exp") for n in names)
+    assert any(n.startswith("ring_lattice") for n in names)
+    # default floor unchanged: never leaves the lattice family
+    base = AdaSchedule(n_nodes=16, k0=4, gamma_k=1.0)
+    assert all(
+        p.name.startswith("ring_lattice") for _, p in base.distinct_programs(6)
+    )
+
+
+def test_centralized_topology_has_no_program():
+    topo = make_topology("c_complete", 8)
+    assert topo.program_at(step=0, epoch=0) is None
+    assert topo.distinct_programs(3) == []
+
+
+def test_d_custom_rejects_node_count_mismatch():
+    """Edge lists infer n from the max index; Topology must not let the
+    replica axis and the mixing program disagree."""
+    with pytest.raises(ValueError, match="describes 3 nodes"):
+        make_topology("d_custom", 8, adjacency=[(0, 1), (1, 2)])
+    # matrix form can express trailing isolated nodes
+    adj = np.zeros((8, 8), int)
+    adj[0, 1] = adj[1, 0] = 1
+    t = make_topology("d_custom", 8, adjacency=adj)
+    assert t.static_graph.n == 8
+
+
+def test_edge_graph_rejects_uniform_weights():
+    """MH is the only well-defined scheme on irregular graphs; requesting
+    'uniform' must fail loudly, not silently return MH."""
+    with pytest.raises(ValueError, match="metropolis"):
+        Star(8).mixing_matrix("uniform")
+
+
+def test_from_adjacency_two_edge_list_is_not_a_matrix():
+    """Regression: a 2-pair edge list np.asarray's to shape (2, 2) and was
+    misparsed as a 2x2 adjacency matrix."""
+    g = from_adjacency([(0, 2), (1, 3)])
+    assert g.n == 4 and g.edges == ((0, 2), (1, 3))
+    g2 = from_adjacency([(0, 1), (1, 2)])
+    assert g2.n == 3 and g2.edges == ((0, 1), (1, 2))
+
+
+def test_opless_program_with_scaling_self_weight_is_not_identity():
+    """Regression: the identity fast path must not swallow self_weight."""
+    prog = GossipProgram(name="scale", n=4, ops=(), self_weight=0.5)
+    x = {"w": jnp.ones((4, 2))}
+    for engine in ("dense", "stacked"):
+        np.testing.assert_allclose(
+            np.asarray(prog.apply(x, engine=engine)["w"]), 0.5, atol=1e-7
+        )
+    np.testing.assert_allclose(prog.matrix(), 0.5 * np.eye(4))
+
+
+def test_mix_every_advances_time_varying_phase():
+    """Regression: with mix_every=H the schedule must index by gossip round,
+    not raw step — raw-step indexing aliases a period-p family to a single
+    phase whenever p divides H (one-peer would gossip the same hop forever,
+    partitioning the network)."""
+    import jax
+
+    from repro.core.simulator import DecentralizedSimulator
+    from repro.optim.sgd import sgd
+
+    def loss(p, b):
+        return jnp.mean((b - p["w"]) ** 2)
+
+    n = 8
+    period = one_peer_period(n)  # 3
+    topo = make_topology("d_one_peer_exp", n)
+    sim = DecentralizedSimulator(loss, sgd(momentum=0.0), topo, mix_every=period)
+    state = sim.init({"w": jnp.zeros(4)})
+    for t in range(3 * period * period):
+        b = jax.random.normal(jax.random.PRNGKey(t), (n, 2, 4))
+        state, *_ = sim.train_step(state, b, 0.01)
+    mix_keys = [
+        k for k in sim._step_cache if k not in ("__local__", "__centralized__")
+    ]
+    assert len(mix_keys) == period, mix_keys
+
+
+# ---------------------------------------------------------------------------
+# shard interpreter + HLO structure (8 host devices, subprocess)
+# ---------------------------------------------------------------------------
+
+def test_shard_interpreter_and_hlo_collectives():
+    """apply_shard == dense oracle on 8 devices AND the compiled HLO shows
+    exactly one collective-permute per circulant offset (no all-gather
+    regression), one all-reduce for complete, all-gather only for the dense
+    fallback."""
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env.pop("JAX_PLATFORMS", None)
+    r = subprocess.run(
+        [
+            sys.executable,
+            os.path.join(os.path.dirname(__file__), "schedule_shard_script.py"),
+        ],
+        capture_output=True, text=True, timeout=600, env=env,
+    )
+    assert r.returncode == 0, f"stderr:\n{r.stderr[-3000:]}\nstdout:\n{r.stdout}"
+    assert "SHARD_INTERPRETER_OK" in r.stdout

@@ -29,9 +29,16 @@ def _extract(out, key):
 
 
 @pytest.mark.slow
-@pytest.mark.parametrize("topo", ["d_ring", "d_exponential", "c_complete", "d_complete"])
+@pytest.mark.parametrize(
+    "topo",
+    [
+        "d_ring", "d_exponential", "c_complete", "d_complete",
+        # time-varying / irregular families ride the same GossipProgram path
+        "d_one_peer_exp", "d_random_matching", "d_star",
+    ],
+)
 def test_spmd_engine_matches_simulator(topo):
-    """shard_map + ppermute production engine == dense-matrix oracle."""
+    """Production engine (compiled GossipProgram) == dense-matrix oracle."""
     out = _run("spmd_equivalence_script.py", topo, "ppermute")
     assert _extract(out, "MAXDIFF") < 5e-5
     assert _extract(out, "LOSSDIFF") < 5e-5
