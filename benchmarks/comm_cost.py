@@ -3,27 +3,41 @@
 Analytic wire-cost model (validated against HLO collective parses in the
 dry-run artifact): bytes each node sends per mixing step for a 25.56M-param
 ResNet50-sized replica (the paper's main subject).
+
+Beyond the paper's five graphs, the sweep includes the star — compiled by
+the PR-3 edge-coloring pass into ≤ Δ+1 permute matchings, whose mean
+per-node cost stays ~2P at every scale, versus the (n−1)·P ring all-gather
+its old GatherRow fallback moved ("gather" rows keep that dense baseline
+visible).  The star section also lands in the committed
+``BENCH_step_time.json`` to track the O(n·P) → O(Δ·P) reduction across PRs.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from benchmarks.common import Row, save_json
+from benchmarks.common import Row, save_bench_section, save_json
 from repro.core.graphs import make_graph, spectral_gap
 from repro.core.mixing import mixing_comm_bytes
+from repro.core.schedule import (
+    compile_graph, dense_program, program_comm_bytes, program_max_node_bytes,
+)
 
 PARAMS = {"resnet50": 25_560_000, "lstm": 28_950_000}
 SCALES = (12, 24, 48, 96, 1008)
 # one_peer_exponential: degree-1 time-varying gossip (arXiv:2410.11998) —
 # the per-step wire-cost floor; its per-step gap is small by design (a full
-# p-step cycle mixes like the dense exponential graph).
-KINDS = ("ring", "torus", "exponential", "one_peer_exponential", "complete")
+# p-step cycle mixes like the dense exponential graph).  star: the PR-3
+# edge-colored irregular representative.
+KINDS = ("ring", "torus", "exponential", "one_peer_exponential", "complete", "star")
 
 
-def run() -> list[Row]:
+def run(*, quick: bool = False) -> list[Row]:
     rows, payload = [], {}
+    bench = {}
+    scales = SCALES[:3] if quick else SCALES
+    param_bytes = 4 * PARAMS["resnet50"]
     fake = {"w": jnp.zeros((PARAMS["resnet50"],), jnp.float32)}
-    for n in SCALES:
+    for n in scales:
         for kind in KINDS:
             g = make_graph(kind, n)
             mb = mixing_comm_bytes(g, fake) / 2**20
@@ -42,5 +56,31 @@ def run() -> list[Row]:
                 "degree": g.degree, "edges": g.num_edges, "mb": mb,
                 "spectral_gap": gap,
             }
+            if kind == "star":
+                # edge-colored vs the dense GatherRow baseline it replaced
+                sparse = compile_graph(g)
+                gather = dense_program(g)
+                bench[f"star/n{n}"] = {
+                    "edge_colored_bytes_per_node": program_comm_bytes(
+                        sparse, param_bytes
+                    ),
+                    "edge_colored_max_node_bytes": program_max_node_bytes(
+                        sparse, param_bytes
+                    ),
+                    "edge_colored_permutes": sparse.num_collectives,
+                    "gather_bytes_per_node": program_comm_bytes(
+                        gather, param_bytes
+                    ),
+                }
+                rows.append(
+                    Row(
+                        f"table1/star_vs_gather/n{n}",
+                        0.0,
+                        f"edge_colored_MB={bench[f'star/n{n}']['edge_colored_bytes_per_node']/2**20:.1f}"
+                        f" gather_MB={bench[f'star/n{n}']['gather_bytes_per_node']/2**20:.1f}"
+                        f" permutes={sparse.num_collectives}",
+                    )
+                )
     save_json("comm_cost", payload)
+    save_bench_section("comm_cost", bench)
     return rows

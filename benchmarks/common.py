@@ -36,6 +36,40 @@ def save_json(name: str, payload) -> str:
     return path
 
 
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_step_time.json")
+
+
+def save_bench_section(section: str, payload) -> str:
+    """Merge one section into the committed BENCH_step_time.json artifact.
+
+    Unlike benchmarks/results/ (generated, untracked), this file IS
+    committed: it records per-program-class step time and bytes-on-wire so
+    the perf trajectory is comparable across PRs.  step_time and comm_cost
+    each own a section; a partial run only refreshes its own keys.
+    """
+    path = os.path.abspath(BENCH_PATH)
+    data = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            data = {}
+    # merge per KEY, not per section: a --quick run must refresh only the
+    # small-scale keys it measured, never clobber the committed full-tier
+    # entries (star/n1008 etc.) it did not
+    merged = data.get(section)
+    if isinstance(merged, dict) and isinstance(payload, dict):
+        merged = {**merged, **payload}
+    else:
+        merged = payload
+    data[section] = merged
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path
+
+
 def sweep_topologies(
     *,
     loss_fn: Callable,

@@ -13,6 +13,10 @@ land in benchmarks/results/ and feed EXPERIMENTS.md.
 Run everything:       PYTHONPATH=src python -m benchmarks.run
 Run one:              PYTHONPATH=src python -m benchmarks.run --only ada
 Quick smoke:          PYTHONPATH=src python -m benchmarks.run --fast
+CI-box tier:          PYTHONPATH=src python -m benchmarks.run --quick
+                      (reduced n/steps/scales everywhere — completes on the
+                      2-CPU box in a few minutes; never run concurrently
+                      with pytest, the timings share the same two cores)
 """
 from __future__ import annotations
 
@@ -25,19 +29,24 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--fast", action="store_true", help="fewer steps/scales")
+    ap.add_argument("--quick", action="store_true",
+                    help="smallest tier: reduced n/steps for every suite so "
+                         "the whole run fits the 2-CPU box")
     args = ap.parse_args()
 
     from benchmarks import accuracy_graphs, ada, comm_cost, lr_scaling, step_time, variance
 
+    small = args.fast or args.quick
     suites = {
-        "comm_cost": lambda: comm_cost.run(),
-        "step_time": lambda: step_time.run(),
+        "comm_cost": lambda: comm_cost.run(quick=args.quick),
+        "step_time": lambda: step_time.run(quick=args.quick),
         "accuracy_graphs": lambda: accuracy_graphs.run(
-            steps=40 if args.fast else 120, scales=(8,) if args.fast else (8, 16)
+            steps=20 if args.quick else (40 if args.fast else 120),
+            scales=(8,) if small else (8, 16),
         ),
-        "variance": lambda: variance.run(steps=30 if args.fast else 50),
-        "ada": lambda: ada.run(steps=40 if args.fast else 120),
-        "lr_scaling": lambda: lr_scaling.run(steps=30 if args.fast else 40),
+        "variance": lambda: variance.run(steps=15 if args.quick else (30 if args.fast else 50)),
+        "ada": lambda: ada.run(steps=20 if args.quick else (40 if args.fast else 120)),
+        "lr_scaling": lambda: lr_scaling.run(steps=15 if args.quick else (30 if args.fast else 40)),
     }
     if args.only:
         suites = {k: v for k, v in suites.items() if k == args.only}

@@ -1,8 +1,17 @@
-"""Microbenchmarks: mixing implementations and kernel oracles (wall-clock).
+"""Microbenchmarks: mixing-program classes and fused multi-step dispatch.
 
-Derived: relative speed of dense-matrix vs circulant-shift mixing (the
-faithful-baseline vs optimized-schedule gap, measurable even on CPU) and
-per-step simulator overhead.
+One row per *program class* — circulant (ring), matching (pairwise
+averaging), edge_colored (star: the PR-3 sparse decomposition), and gather
+(the dense GatherRow all-gather the star used to compile to) — with
+median/p90 apply wall time and the analytic bytes-on-wire per node.  A
+second block measures multi-step fusion: a full one-peer exponential cycle
+as H separate dispatches vs ONE fused executable (``GossipProgram.fuse``).
+
+Timing uses per-call samples (best/median/p90) because the 2-CPU CI box is
+noisy; bytes come from ``program_comm_bytes`` (mean per node) and
+``program_max_node_bytes`` (busiest node), both validated against HLO
+collective parses elsewhere.  Everything lands in the committed
+``BENCH_step_time.json`` so the perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
@@ -10,39 +19,107 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from benchmarks.common import Row, save_json
-from repro.core.graphs import make_graph
-from repro.core.mixing import mix_dense, mix_shift
+from benchmarks.common import Row, save_bench_section, save_json
+from repro.core.graphs import Star, make_graph, one_peer_period, random_matching
+from repro.core.schedule import (
+    GossipProgram, compile_graph, dense_program, program_comm_bytes,
+    program_max_node_bytes,
+)
 
 
-def _time(fn, *args, reps=20):
-    fn(*args)  # compile
-    t0 = time.perf_counter()
+def _sample(fn, *args, reps=20):
+    """Per-call wall-time samples in µs (first call = compile, excluded)."""
+    jax.block_until_ready(fn(*args))
+    out = []
     for _ in range(reps):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return 1e6 * (time.perf_counter() - t0) / reps
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        out.append(1e6 * (time.perf_counter() - t0))
+    return out
 
 
-def run() -> list[Row]:
+def _stats(samples):
+    return {
+        "best_us": float(np.min(samples)),
+        "median_us": float(np.median(samples)),
+        "p90_us": float(np.percentile(samples, 90)),
+    }
+
+
+def _program_classes(n: int):
+    """One representative compiled program per class."""
+    star = Star(n)
+    return {
+        "circulant": compile_graph(make_graph("ring", n)),
+        "matching": compile_graph(random_matching(n, seed=0)),
+        "edge_colored": compile_graph(star),
+        "gather": dense_program(star),
+    }
+
+
+def run(*, quick: bool = False) -> list[Row]:
     rows, payload = [], {}
     n = 16
-    for size in (1 << 16, 1 << 20):
+    reps = 8 if quick else 20
+    sizes = (1 << 14,) if quick else (1 << 16, 1 << 20)
+    for size in sizes:
         x = {"w": jax.random.normal(jax.random.PRNGKey(0), (n, size))}
-        for kind in ("ring", "exponential", "complete"):
-            g = make_graph(kind, n)
-            w = jnp.asarray(g.mixing_matrix(), jnp.float32)
-            t_dense = _time(jax.jit(lambda t: mix_dense(t, w)), x)
-            t_shift = _time(jax.jit(lambda t: mix_shift(t, g)), x)
+        param_bytes = 4 * size
+        for cls, prog in _program_classes(n).items():
+            fn = jax.jit(prog.apply_stacked)
+            stats = _stats(_sample(fn, x, reps=reps))
+            stats["bytes_per_node"] = program_comm_bytes(prog, param_bytes)
+            stats["max_node_bytes"] = program_max_node_bytes(prog, param_bytes)
+            stats["n_collectives"] = prog.num_collectives
+            payload[f"{cls}/n{n}/p{size}"] = stats
             rows.append(
                 Row(
-                    f"mixing/{kind}/p{size}",
-                    t_shift,
-                    f"dense_us={t_dense:.0f} shift_us={t_shift:.0f} "
-                    f"speedup={t_dense/max(t_shift,1e-9):.2f}x",
+                    f"mixing/{cls}/p{size}",
+                    stats["median_us"],
+                    f"median_us={stats['median_us']:.0f} "
+                    f"p90_us={stats['p90_us']:.0f} "
+                    f"bytes_per_node={stats['bytes_per_node']} "
+                    f"ops={stats['n_collectives']}",
                 )
             )
-            payload[f"{kind}/p{size}"] = {"dense": t_dense, "shift": t_shift}
+
+    # -- multi-step fusion: H one-peer dispatches vs one fused executable ----
+    size = sizes[0]
+    x = {"w": jax.random.normal(jax.random.PRNGKey(1), (n, size))}
+    period = one_peer_period(n)
+    progs = [
+        compile_graph(make_graph("one_peer_exponential", n, step=t))
+        for t in range(period)
+    ]
+    fns = [jax.jit(p.apply_stacked) for p in progs]
+
+    def run_separate(v):
+        for f in fns:
+            v = f(v)
+        return v
+
+    fused = GossipProgram.fuse(progs)
+    fused_fn = jax.jit(fused.apply_stacked)
+    sep = _stats(_sample(run_separate, x, reps=reps))
+    fus = _stats(_sample(fused_fn, x, reps=reps))
+    fusion = {
+        "period": period,
+        "separate": {**sep, "executables": len(fns)},
+        "fused": {**fus, "executables": 1},
+        "dispatch_reduction": f"{len(fns)}->1",
+    }
+    payload["fusion/one_peer"] = fusion
+    rows.append(
+        Row(
+            "fusion/one_peer",
+            fus["median_us"],
+            f"H={period} separate_us={sep['median_us']:.0f} "
+            f"fused_us={fus['median_us']:.0f} executables={len(fns)}->1",
+        )
+    )
+
     save_json("step_time", payload)
+    save_bench_section("step_time", payload)
     return rows

@@ -151,6 +151,24 @@ class Topology:
         g = self.graph_at(epoch, step)
         return None if g is None else compile_graph(g)
 
+    def fused_program_at(
+        self, *, step: int = 0, epoch: int = 0, rounds: int = 1
+    ) -> Optional[GossipProgram]:
+        """The program for gossip round ``step`` when every round applies
+        ``rounds`` consecutive schedule steps fused into ONE executable
+        (``GossipProgram.fuse``) — H dispatches collapse to one, and a
+        time-varying family advances its phase by ``rounds`` per round.
+        """
+        if rounds <= 1:
+            return self.program_at(step=step, epoch=epoch)
+        progs = [
+            self.program_at(step=step * rounds + r, epoch=epoch)
+            for r in range(rounds)
+        ]
+        if any(p is None for p in progs):
+            return None
+        return GossipProgram.fuse(progs)
+
     def period_at(self, epoch: int = 0) -> int:
         """Steps before the program repeats within an epoch (1 = static)."""
         if self.sequence is not None:

@@ -19,9 +19,10 @@ classes split the old monolithic ``CommGraph``:
   * ``EdgeGraph``      — the general path: an explicit undirected edge set
     with per-node degrees and Metropolis–Hastings weights
     ``W_ij = 1/(1 + max(deg_i, deg_j))`` (doubly stochastic for *any*
-    undirected graph).  Matchings compile to a single permute with
-    per-node weights; other irregular graphs fall back to the dense
-    gather-row program.
+    undirected graph).  The compiler edge-colors the edge set into ≤ Δ+1
+    matchings (Vizing / Misra–Gries), one per-node-weighted permute each —
+    a matching is the 1-color special case, and the star costs O(Δ)
+    permute rounds instead of the dense gather-row all-gather.
 
 Weights on circulant graphs follow Algorithm 1 of the paper: uniform
 ``1/(deg+1)`` over the closed neighborhood (self included; multi-edges —

@@ -64,6 +64,7 @@ class DecentralizedSimulator:
         *,
         mixing: str = "dense",  # "dense" (paper equation) | "shift" (stacked)
         mix_every: int = 1,
+        mix_rounds: int = 1,
         collect_norms: bool = False,
         has_rng: bool = False,
     ):
@@ -74,6 +75,9 @@ class DecentralizedSimulator:
           topology: which SGD implementation to simulate.
           mixing: which ``GossipProgram`` interpreter executes W θ — "dense"
             (paper-faithful matrix product) or "shift" (stacked roll/gather).
+          mix_rounds: gossip rounds fused into each mixing step — H
+            consecutive schedule steps (e.g. a full one-peer cycle) run as
+            ONE cached executable instead of H dispatches.
         """
         if mixing not in _ENGINES:
             raise ValueError(
@@ -85,6 +89,7 @@ class DecentralizedSimulator:
         self.n = topology.n_nodes
         self.mixing = mixing
         self.mix_every = max(int(mix_every), 1)
+        self.mix_rounds = max(int(mix_rounds), 1)
         self.collect_norms = collect_norms
         self.has_rng = has_rng
         self._step_cache: dict[Any, Callable] = {}
@@ -156,7 +161,9 @@ class DecentralizedSimulator:
             key = "__local__"
             program = None
         else:
-            program = self.topology.program_at(step=step, epoch=epoch)
+            program = self.topology.fused_program_at(
+                step=step, epoch=epoch, rounds=self.mix_rounds
+            )
             key = program.cache_key if program is not None else "__local__"
         if key not in self._step_cache:
             self._step_cache[key] = self._build_step(program)

@@ -1,4 +1,4 @@
-"""Fused gossip-apply kernel: momentum-SGD step + weighted neighbor average.
+"""Fused gossip-apply kernels: momentum-SGD step + weighted neighbor average.
 
 The decentralized inner loop ends with three elementwise passes over the
 full parameter vector (optimizer update, then the weighted sum of self +
@@ -8,7 +8,27 @@ costs ``(deg + 5)`` HBM reads + 3 writes of P; this kernel fuses it into
 
     m'     = beta * m + g
     theta* = theta - lr * m'
-    theta' = w_0 * theta* + Σ_i w_i * n_i
+    theta' = w_0 * theta* + Σ_i w_i * n_i         (mix_order="post")
+
+(or, for ``mix_order="pre"``, mix the raw params first and descend after:
+``theta' = w_0·theta + Σ_i w_i·n_i − lr·m'``, which needs no pre-send
+materialization of theta*).
+
+Two granularities share one kernel body:
+
+  * ``gossip_update``          — one node: theta (P,), neighbors (deg, P),
+    weights (deg+1,) in SMEM.  The original single-replica entry point.
+  * ``gossip_program_update``  — a whole stacked replica axis: theta
+    (n, P), neighbors (n, deg, P), per-node weights (n, deg+1); the grid
+    runs (node, block) and each node's (deg+1,) weight row is selected
+    into SMEM by the BlockSpec index map.  This is the executor for
+    compiled PPermute programs (circulant offsets, matchings, and
+    edge-colored irregular graphs alike) — ``fused_apply_stacked`` feeds
+    it straight from a ``GossipProgram``.
+
+``lr``/``beta`` ride in a (2,) SMEM vector at *runtime* — LR schedules do
+not retrigger compiles — and ``interpret`` auto-detects the backend
+(compiled on TPU, interpreter elsewhere).
 
 Layout: parameters are flattened and blocked 1-D ((block,) VMEM tiles,
 8·128-aligned); neighbor buffers arrive stacked (deg, P) — on TPU these are
@@ -23,46 +43,87 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["gossip_update"]
+__all__ = [
+    "gossip_update",
+    "gossip_program_update",
+    "fused_apply_stacked",
+    "fused_apply_shard",
+]
 
 
-def _kernel(w_ref, theta_ref, nbr_ref, grad_ref, mom_ref, out_ref, mom_out_ref,
-            *, lr: float, beta: float, deg: int):
-    g = grad_ref[...].astype(jnp.float32)
-    m_new = beta * mom_ref[...].astype(jnp.float32) + g
-    local = theta_ref[...].astype(jnp.float32) - lr * m_new
-    acc = w_ref[0] * local
+def _auto_interpret(interpret):
+    """Compiled Pallas on TPU; interpreter everywhere else (exact semantics,
+    so CPU tests stay bit-meaningful)."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def _auto_block(block, interpret):
+    """Default tile: 1024 (8·128-aligned VMEM tile) when compiled; 2^20 in
+    interpreter mode, whose grid is a host-level loop — the tile bound is
+    correctness-irrelevant there and small tiles make the loop the
+    bottleneck (~1 ms per grid cell on CPU)."""
+    if block is not None:
+        return block
+    return (1 << 20) if interpret else 1024
+
+
+def _mix_block(w, theta, nbrs, grad, mom, lr, beta, *, deg, mix_order, out_dtype):
+    """Shared kernel math on one VMEM tile; ``w[k]`` scalar-indexes SMEM."""
+    g = grad.astype(jnp.float32)
+    m_new = beta * mom.astype(jnp.float32) + g
+    base = theta.astype(jnp.float32)
+    if mix_order == "post":
+        acc = w(0) * (base - lr * m_new)
+    else:  # pre: mix raw params, descend afterwards
+        acc = w(0) * base
     for i in range(deg):
-        acc += w_ref[i + 1] * nbr_ref[i].astype(jnp.float32)
-    out_ref[...] = acc.astype(out_ref.dtype)
+        acc = acc + w(i + 1) * nbrs(i).astype(jnp.float32)
+    if mix_order == "pre":
+        acc = acc - lr * m_new
+    return acc.astype(out_dtype), m_new
+
+
+def _kernel(sc_ref, w_ref, theta_ref, nbr_ref, grad_ref, mom_ref, out_ref,
+            mom_out_ref, *, deg: int, mix_order: str):
+    out, m_new = _mix_block(
+        lambda k: w_ref[k], theta_ref[...], lambda i: nbr_ref[i],
+        grad_ref[...], mom_ref[...], sc_ref[0], sc_ref[1],
+        deg=deg, mix_order=mix_order, out_dtype=out_ref.dtype,
+    )
+    out_ref[...] = out
     mom_out_ref[...] = m_new
 
 
-@functools.partial(jax.jit, static_argnames=("lr", "beta", "block", "interpret"))
-def gossip_update(
-    theta: jax.Array,      # (P,)
-    neighbors: jax.Array,  # (deg, P)
-    weights: jax.Array,    # (deg + 1,) [self, n_1..n_deg]
-    grad: jax.Array,       # (P,)
-    momentum: jax.Array,   # (P,) float32
-    *,
-    lr: float,
-    beta: float,
-    block: int = 1024,
-    interpret: bool = True,
-) -> tuple[jax.Array, jax.Array]:
-    """Returns (theta', m')."""
+def _program_kernel(sc_ref, w_ref, theta_ref, nbr_ref, grad_ref, mom_ref,
+                    out_ref, mom_out_ref, *, deg: int, mix_order: str):
+    out, m_new = _mix_block(
+        lambda k: w_ref[0, k], theta_ref[0], lambda i: nbr_ref[0, i],
+        grad_ref[0], mom_ref[0], sc_ref[0], sc_ref[1],
+        deg=deg, mix_order=mix_order, out_dtype=out_ref.dtype,
+    )
+    out_ref[0] = out
+    mom_out_ref[0] = m_new
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block", "interpret", "mix_order")
+)
+def _gossip_update(theta, neighbors, weights, grad, momentum, scalars, *,
+                   block: int, interpret: bool, mix_order: str):
     (p,) = theta.shape
     deg = neighbors.shape[0]
     block = min(block, p)
     if p % block:
         raise ValueError(f"param length {p} must tile by block {block}")
     grid = (p // block,)
-    out, m_out = pl.pallas_call(
-        functools.partial(_kernel, lr=lr, beta=beta, deg=deg),
+    return pl.pallas_call(
+        functools.partial(_kernel, deg=deg, mix_order=mix_order),
         grid=grid,
         in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),          # weights
+            pl.BlockSpec(memory_space=pltpu.SMEM),           # [lr, beta]
+            pl.BlockSpec(memory_space=pltpu.SMEM),           # weights
             pl.BlockSpec((block,), lambda i: (i,)),          # theta
             pl.BlockSpec((deg, block), lambda i: (0, i)),    # neighbors
             pl.BlockSpec((block,), lambda i: (i,)),          # grad
@@ -77,5 +138,277 @@ def gossip_update(
             jax.ShapeDtypeStruct((p,), jnp.float32),
         ],
         interpret=interpret,
-    )(weights.astype(jnp.float32), theta, neighbors, grad, momentum)
-    return out, m_out
+    )(scalars, weights.astype(jnp.float32), theta, neighbors, grad, momentum)
+
+
+def gossip_update(
+    theta: jax.Array,      # (P,)
+    neighbors: jax.Array,  # (deg, P)
+    weights: jax.Array,    # (deg + 1,) [self, n_1..n_deg]
+    grad: jax.Array,       # (P,)
+    momentum: jax.Array,   # (P,) float32
+    *,
+    lr,
+    beta,
+    block: int | None = None,
+    interpret: bool | None = None,
+    mix_order: str = "post",
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (theta', m').  lr/beta are runtime values (no recompiles)."""
+    interpret = _auto_interpret(interpret)
+    scalars = jnp.stack(
+        [jnp.asarray(lr, jnp.float32), jnp.asarray(beta, jnp.float32)]
+    )
+    return _gossip_update(
+        theta, neighbors, weights, grad, momentum, scalars,
+        block=_auto_block(block, interpret), interpret=interpret,
+        mix_order=mix_order,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block", "interpret", "mix_order")
+)
+def _gossip_program_update(theta, neighbors, weights, grad, momentum, scalars,
+                           *, block: int, interpret: bool, mix_order: str):
+    n, p = theta.shape
+    deg = neighbors.shape[1]
+    block = min(block, p)
+    if p % block:
+        raise ValueError(f"param length {p} must tile by block {block}")
+    grid = (n, p // block)
+    return pl.pallas_call(
+        functools.partial(_program_kernel, deg=deg, mix_order=mix_order),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),              # [lr, beta]
+            # this node's (deg+1,) weight row, selected into SMEM per node
+            pl.BlockSpec((1, deg + 1), lambda i, j: (i, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, block), lambda i, j: (i, j)),       # theta
+            pl.BlockSpec((1, deg, block), lambda i, j: (i, 0, j)),  # nbrs
+            pl.BlockSpec((1, block), lambda i, j: (i, j)),       # grad
+            pl.BlockSpec((1, block), lambda i, j: (i, j)),       # momentum
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block), lambda i, j: (i, j)),
+            pl.BlockSpec((1, block), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, p), theta.dtype),
+            jax.ShapeDtypeStruct((n, p), jnp.float32),
+        ],
+        interpret=interpret,
+    )(scalars, weights.astype(jnp.float32), theta, neighbors, grad, momentum)
+
+
+def gossip_program_update(
+    theta: jax.Array,      # (n, P) stacked replicas
+    neighbors: jax.Array,  # (n, deg, P) permute landing buffers
+    weights: jax.Array,    # (n, deg + 1) per-node [self, w_1..w_deg]
+    grad: jax.Array,       # (n, P)
+    momentum: jax.Array,   # (n, P) float32
+    *,
+    lr,
+    beta,
+    block: int | None = None,
+    interpret: bool | None = None,
+    mix_order: str = "post",
+) -> tuple[jax.Array, jax.Array]:
+    """Per-node-weight program executor over the stacked axis."""
+    interpret = _auto_interpret(interpret)
+    scalars = jnp.stack(
+        [jnp.asarray(lr, jnp.float32), jnp.asarray(beta, jnp.float32)]
+    )
+    return _gossip_program_update(
+        theta, neighbors, weights, grad, momentum, scalars,
+        block=_auto_block(block, interpret), interpret=interpret,
+        mix_order=mix_order,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Program-level glue: one decentralized SGD round for stacked pytrees
+# ---------------------------------------------------------------------------
+
+def _flatten_stacked(tree, n):
+    leaves = jax.tree.leaves(tree)
+    flat = [x.reshape(n, -1) for x in leaves]
+    sizes = [f.shape[1] for f in flat]
+    return jnp.concatenate(flat, axis=1), sizes
+
+
+def _unflatten_stacked(mat, tree, sizes):
+    leaves = jax.tree.leaves(tree)
+    out, off = [], 0
+    for leaf, size in zip(leaves, sizes):
+        out.append(mat[:, off:off + size].reshape(leaf.shape).astype(leaf.dtype))
+        off += size
+    return jax.tree.unflatten(jax.tree.structure(tree), out)
+
+
+def fused_apply_stacked(
+    program,
+    params,     # pytree, leaves (n, ...)
+    grads,      # matching pytree
+    momentum,   # matching pytree (float32), or () when beta == 0
+    *,
+    lr,
+    beta,
+    mix_order: str = "post",
+    block: int | None = None,
+    interpret: bool | None = None,
+):
+    """One fused momentum-SGD + gossip round for a compiled PPermute program.
+
+    Flattens the stacked trees to (n, P) (zero-padded to a block multiple),
+    gathers each node's neighbor landing buffers per the program's
+    ``permute_tables`` — for ``mix_order="post"`` the wire carries the
+    *post-update* θ\\*, for ``"pre"`` the raw θ, so nothing extra is
+    materialized — and runs ``gossip_program_update``.  Returns
+    ``(new_params, new_momentum)`` with the input tree structure.
+
+    Raises ``ValueError`` for programs with non-permute ops (AllReduce /
+    GatherRow / fused multi-round): those keep the interpreter path.
+    """
+    tables = program.permute_tables()
+    if tables is None:
+        raise ValueError(
+            f"program {program.name!r} is not an all-PPermute single round; "
+            "fused apply supports permute programs only"
+        )
+    srcs, weights = tables
+    interpret = _auto_interpret(interpret)
+    block = _auto_block(block, interpret)
+    n = program.n
+    theta, sizes = _flatten_stacked(params, n)
+    g_mat, _ = _flatten_stacked(grads, n)
+    if momentum == () or momentum is None:
+        m_mat = jnp.zeros(theta.shape, jnp.float32)
+        had_momentum = False
+    else:
+        m_mat, _ = _flatten_stacked(momentum, n)
+        had_momentum = True
+    p = theta.shape[1]
+    block = min(block, p)
+    pad = (-p) % block
+    if pad:
+        theta = jnp.pad(theta, ((0, 0), (0, pad)))
+        g_mat = jnp.pad(g_mat, ((0, 0), (0, pad)))
+        m_mat = jnp.pad(m_mat, ((0, 0), (0, pad)))
+
+    lr32 = jnp.asarray(lr, jnp.float32)
+    beta32 = jnp.asarray(beta, jnp.float32)
+    if mix_order == "post":
+        # the buffers on the wire are the senders' post-update params
+        wire = (
+            theta.astype(jnp.float32)
+            - lr32 * (beta32 * m_mat + g_mat.astype(jnp.float32))
+        ).astype(theta.dtype)
+    else:
+        wire = theta
+    # (n, deg) fancy index along the node axis -> (n, deg, P) landing buffers
+    nbrs = jnp.take(wire, jnp.asarray(srcs), axis=0)
+
+    out, m_new = gossip_program_update(
+        theta, nbrs, jnp.asarray(weights), g_mat, m_mat,
+        lr=lr32, beta=beta32, block=block, interpret=interpret,
+        mix_order=mix_order,
+    )
+    if pad:
+        out = out[:, :p]
+        m_new = m_new[:, :p]
+    new_params = _unflatten_stacked(out, params, sizes)
+    if not had_momentum:
+        return new_params, ()
+    return new_params, _unflatten_stacked(m_new, momentum, sizes)
+
+
+def _flatten_local(tree):
+    leaves = jax.tree.leaves(tree)
+    flat = [x.reshape(-1) for x in leaves]
+    return jnp.concatenate(flat), [f.shape[0] for f in flat]
+
+
+def _unflatten_local(vec, tree, sizes):
+    leaves = jax.tree.leaves(tree)
+    out, off = [], 0
+    for leaf, size in zip(leaves, sizes):
+        out.append(vec[off:off + size].reshape(leaf.shape).astype(leaf.dtype))
+        off += size
+    return jax.tree.unflatten(jax.tree.structure(tree), out)
+
+
+def fused_apply_shard(
+    program,
+    params,     # pytree of THIS node's values (inside shard_map)
+    grads,
+    momentum,   # matching pytree (float32), or () when beta == 0
+    axis_names,
+    *,
+    lr,
+    beta,
+    mix_order: str = "post",
+    block: int | None = None,
+    interpret: bool | None = None,
+):
+    """The production-path twin of ``fused_apply_stacked``: one fused
+    momentum-SGD + gossip round on per-node values inside ``shard_map``.
+
+    One ``jax.lax.ppermute`` per compiled permute delivers the neighbor
+    landing buffers (non-participating nodes receive zeros, matching the
+    zero weight in their SMEM row); this node's (deg+1,) weight row is
+    selected by its flat axis index.  Returns ``(new_params, new_momentum)``.
+    """
+    from repro.core.schedule import _flat_axis_index  # avoid import cycle
+
+    tables = program.permute_tables()
+    if tables is None:
+        raise ValueError(
+            f"program {program.name!r} is not an all-PPermute single round; "
+            "fused apply supports permute programs only"
+        )
+    _, weights = tables
+    interpret = _auto_interpret(interpret)
+    block = _auto_block(block, interpret)
+    theta, sizes = _flatten_local(params)
+    g_vec, _ = _flatten_local(grads)
+    if momentum == () or momentum is None:
+        m_vec = jnp.zeros(theta.shape, jnp.float32)
+        had_momentum = False
+    else:
+        m_vec, _ = _flatten_local(momentum)
+        had_momentum = True
+    p = theta.shape[0]
+    block = min(block, p)
+    pad = (-p) % block
+    if pad:
+        theta = jnp.pad(theta, (0, pad))
+        g_vec = jnp.pad(g_vec, (0, pad))
+        m_vec = jnp.pad(m_vec, (0, pad))
+
+    lr32 = jnp.asarray(lr, jnp.float32)
+    beta32 = jnp.asarray(beta, jnp.float32)
+    if mix_order == "post":
+        wire = (
+            theta.astype(jnp.float32)
+            - lr32 * (beta32 * m_vec + g_vec.astype(jnp.float32))
+        ).astype(theta.dtype)
+    else:
+        wire = theta
+    nbrs = jnp.stack(
+        [jax.lax.ppermute(wire, axis_names, list(op.perm)) for op in program.ops]
+    )
+    wrow = jnp.asarray(weights)[_flat_axis_index(axis_names)]
+    out, m_new = gossip_update(
+        theta, nbrs, wrow, g_vec, m_vec,
+        lr=lr32, beta=beta32, block=block, interpret=interpret,
+        mix_order=mix_order,
+    )
+    if pad:
+        out = out[:p]
+        m_new = m_new[:p]
+    new_params = _unflatten_local(out, params, sizes)
+    if not had_momentum:
+        return new_params, ()
+    return new_params, _unflatten_local(m_new, momentum, sizes)

@@ -13,7 +13,13 @@ from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.gossip_update import gossip_update as _gossip
 from repro.kernels.stats import l2_norms as _l2
 
-__all__ = ["flash_attention", "gossip_update", "l2_norms", "default_interpret"]
+__all__ = [
+    "flash_attention",
+    "gossip_update",
+    "gossip_program_update",
+    "l2_norms",
+    "default_interpret",
+]
 
 
 def default_interpret() -> bool:
@@ -31,11 +37,25 @@ def flash_attention(q, k, v, *, causal=True, window=None, block_q=128, block_k=1
 
 
 def gossip_update(theta, neighbors, weights, grad, momentum, *, lr, beta,
-                  block=1024, interpret=None):
-    itp = default_interpret() if interpret is None else interpret
+                  block=1024, interpret=None, mix_order="post"):
+    """lr/beta are runtime scalars (LR schedules do not retrigger compiles);
+    interpret=None auto-detects the backend inside the kernel module."""
     return _gossip(
         theta, neighbors, weights, grad, momentum,
-        lr=lr, beta=beta, block=block, interpret=itp,
+        lr=lr, beta=beta, block=block, interpret=interpret,
+        mix_order=mix_order,
+    )
+
+
+def gossip_program_update(theta, neighbors, weights, grad, momentum, *, lr,
+                          beta, block=1024, interpret=None, mix_order="post"):
+    """(n, P) stacked executor with per-node (deg+1,) SMEM weight rows."""
+    from repro.kernels.gossip_update import gossip_program_update as _prog
+
+    return _prog(
+        theta, neighbors, weights, grad, momentum,
+        lr=lr, beta=beta, block=block, interpret=interpret,
+        mix_order=mix_order,
     )
 
 

@@ -26,7 +26,12 @@ import json
 import re
 from collections import defaultdict
 
-__all__ = ["analyze_hlo", "COLLECTIVE_KINDS"]
+__all__ = [
+    "analyze_hlo",
+    "collective_counts",
+    "assert_no_all_gather",
+    "COLLECTIVE_KINDS",
+]
 
 COLLECTIVE_KINDS = (
     "all-reduce",
@@ -127,6 +132,39 @@ def _parse_computations(text: str) -> dict[str, list[_Op]]:
         operands = _OPERAND_RE.findall(operand_str)
         comps[cur].append(_Op(name, kind, rtype, operands, attrs))
     return comps
+
+
+def _hlo_text_of(fn_or_hlo, *args) -> str:
+    """Compiled HLO text of a (jitted) callable on ``args``, or pass through
+    an already-extracted HLO string."""
+    if isinstance(fn_or_hlo, str):
+        return fn_or_hlo
+    lowered = fn_or_hlo.lower(*args)
+    return lowered.compile().as_text()
+
+
+def collective_counts(fn_or_hlo, *args) -> dict[str, int]:
+    """Loop-aware collective-op counts of a compiled function's HLO."""
+    return analyze_hlo(_hlo_text_of(fn_or_hlo, *args)).get("coll_counts", {})
+
+
+def assert_no_all_gather(fn_or_hlo, *args, forbid=("all-gather",)) -> dict:
+    """Assert the compiled HLO carries none of the ``forbid`` collectives.
+
+    The acceptance bar for the sparse mixing compiler: a colorable graph
+    (circulant, matching, edge-colored star/irregular) must lower to
+    collective-permutes only — any all-gather means the dense GatherRow
+    fallback leaked back onto the hot path.  Accepts a jitted callable plus
+    its example args (lowered and compiled here) or a raw HLO string.
+    Returns the full collective-count dict for further assertions.
+    """
+    counts = collective_counts(fn_or_hlo, *args)
+    bad = {k: v for k, v in counts.items() if k in forbid and v}
+    if bad:
+        raise AssertionError(
+            f"forbidden collectives in lowered HLO: {bad} (all counts: {counts})"
+        )
+    return counts
 
 
 def analyze_hlo(text: str) -> dict:

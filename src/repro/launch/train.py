@@ -125,13 +125,28 @@ class SPMDTrainer:
         collect_norms: bool = False,
         mixing: str = "ppermute",  # ppermute (compiled program) | dense
         mix_every: int = 1,
+        mix_rounds: int = 1,
+        fused_apply: bool = False,
         donate: bool = True,
     ):
         """mix_every: gossip once every H optimizer steps (local-SGD ×
         decentralized; beyond-paper — the limit of the paper's Obs. 5 that
         late-stage connectivity is nearly free to drop).  The non-mixing
         step compiles separately, so the H−1 local steps carry zero gossip
-        collectives."""
+        collectives.
+
+        mix_rounds: fuse H consecutive schedule steps into each gossip
+        round — ONE cached executable runs all H rounds back-to-back
+        (``GossipProgram.fuse``), so e.g. a full one-peer exponential cycle
+        is a single dispatch instead of H.
+
+        fused_apply: run optimizer update + gossip averaging as one fused
+        Pallas pass (``kernels/gossip_update``) whenever the step's program
+        is all-PPermute (circulant, matching, edge-colored); programs with
+        AllReduce/GatherRow ops and non-mixing steps keep the interpreter
+        path.  Requires plain momentum-SGD (the kernel re-implements the
+        update); the dense-interpreter oracle remains the correctness bar.
+        """
         if mixing not in ("ppermute", "dense"):
             raise ValueError(f"mixing must be 'ppermute'|'dense', got {mixing!r}")
         self.cfg = cfg
@@ -142,6 +157,21 @@ class SPMDTrainer:
         self.collect_norms = collect_norms
         self.mixing = mixing
         self.mix_every = max(int(mix_every), 1)
+        self.mix_rounds = max(int(mix_rounds), 1)
+        self.fused_apply = bool(fused_apply)
+        if self.fused_apply:
+            hyper = optimizer.hyper or {}
+            if (
+                hyper.get("kind") != "sgd"
+                or hyper.get("nesterov")
+                or hyper.get("weight_decay")
+            ):
+                raise ValueError(
+                    "fused_apply re-implements the update inside the Pallas "
+                    "kernel and supports plain momentum-SGD only; got "
+                    f"{optimizer.name}"
+                )
+            self._fused_beta = float(hyper.get("momentum", 0.0))
         self.donate = donate
         self.gossip_axes = gossip_axes_for(cfg.name, mesh)
         self.g = gossip_size(mesh, self.gossip_axes)
@@ -160,13 +190,24 @@ class SPMDTrainer:
         self._build_shardings()
 
     # -- mixing program -------------------------------------------------------
-    def _program_at(self, step: int, epoch: int) -> Optional[GossipProgram]:
+    def _one_program(self, step: int, epoch: int) -> Optional[GossipProgram]:
         graph = self.topology.graph_at(epoch, step)
         if graph is None:
             return None
         if self.mixing == "dense":
             return dense_program(graph)
         return compile_graph(graph)
+
+    def _program_at(self, step: int, epoch: int) -> Optional[GossipProgram]:
+        if self.mix_rounds <= 1:
+            return self._one_program(step, epoch)
+        progs = [
+            self._one_program(step * self.mix_rounds + r, epoch)
+            for r in range(self.mix_rounds)
+        ]
+        if any(p is None for p in progs):
+            return None
+        return GossipProgram.fuse(progs)
 
     def precompile_programs(self, n_epochs: int = 1) -> list[GossipProgram]:
         """Enumerate every distinct program a run will rotate through.
@@ -257,11 +298,46 @@ class SPMDTrainer:
         (loss, grads), _ = jax.lax.scan(acc_body, zero, micro)
         return loss, grads
 
+    # -- fused kernel eligibility ---------------------------------------------
+    def _fused_split(self, program: Optional[GossipProgram]):
+        """(kernel_stage, interpreter_stages) when the fused Pallas apply can
+        run this program, else None.
+
+        The kernel handles one all-PPermute round (circulant offsets,
+        matchings, edge-colored graphs).  A ``mix_rounds`` FusedProgram
+        composes: the kernel executes update + round 1, the interpreter the
+        remaining rounds — still one executable.  Not eligible: programs
+        with AllReduce/GatherRow first ops, non-mixing steps, and
+        ``mix_order="pre"`` multi-round fusions (there the descent must
+        follow ALL rounds, which the one-round kernel cannot express).
+        """
+        from repro.core.schedule import FusedProgram
+
+        if (
+            not self.fused_apply
+            or program is None
+            or self.topology.centralized
+        ):
+            return None
+        if isinstance(program, FusedProgram):
+            if self.topology.mix_order != "post":
+                return None
+            first, rest = program.stages[0], program.stages[1:]
+        else:
+            first, rest = program, ()
+        if first.permute_tables() is None:
+            return None
+        return first, rest
+
+    def _use_fused(self, program: Optional[GossipProgram]) -> bool:
+        return self._fused_split(program) is not None
+
     # -- the node-level step (shard_map realization) ------------------------------
     def _node_step(self, program: Optional[GossipProgram]):
         topo = self.topology
         opt = self.optimizer
         axes = self.gossip_axes
+        fused = self._fused_split(program) if self.g > 1 else None
 
         def node_step(params_st, opt_st, batch_st, lr):
             squeeze = self.g > 1
@@ -278,11 +354,22 @@ class SPMDTrainer:
 
             if topo.centralized and self.g > 1:
                 grads = jax.tree.map(lambda g: jax.lax.pmean(g, axes), grads)
-            if topo.mix_order == "pre" and program is not None and self.g > 1:
-                params = program.apply_shard(params, axes)
-            new_p, new_o = opt.update(grads, opt_state, params, lr)
-            if topo.mix_order == "post" and program is not None and self.g > 1:
-                new_p = program.apply_shard(new_p, axes)
+            if fused:
+                from repro.kernels.gossip_update import fused_apply_shard
+
+                first, rest = fused
+                new_p, new_o = fused_apply_shard(
+                    first, params, grads, opt_state, axes,
+                    lr=lr, beta=self._fused_beta, mix_order=topo.mix_order,
+                )
+                for stage in rest:
+                    new_p = stage.apply_shard(new_p, axes)
+            else:
+                if topo.mix_order == "pre" and program is not None and self.g > 1:
+                    params = program.apply_shard(params, axes)
+                new_p, new_o = opt.update(grads, opt_state, params, lr)
+                if topo.mix_order == "post" and program is not None and self.g > 1:
+                    new_p = program.apply_shard(new_p, axes)
 
             if squeeze:
                 new_p = jax.tree.map(lambda x: x[None], new_p)
@@ -303,6 +390,7 @@ class SPMDTrainer:
         """
         topo = self.topology
         opt = self.optimizer
+        fused = self._fused_split(program)
 
         def stacked_step(params, opt_state, batch, lr):
             loss, grads = jax.vmap(self._grads_of)(params, batch)
@@ -318,6 +406,17 @@ class SPMDTrainer:
                     ),
                     grads,
                 )
+            if fused:
+                from repro.kernels.gossip_update import fused_apply_stacked
+
+                first, rest = fused
+                new_p, new_o = fused_apply_stacked(
+                    first, params, grads, opt_state,
+                    lr=lr, beta=self._fused_beta, mix_order=topo.mix_order,
+                )
+                for stage in rest:
+                    new_p = stage.apply_stacked(new_p)
+                return new_p, new_o, loss, norms
             if topo.mix_order == "pre" and program is not None:
                 params = program.apply_stacked(params)
             new_p, new_o = jax.vmap(opt.update, in_axes=(0, 0, 0, None))(
@@ -486,6 +585,12 @@ def main() -> None:
     ap.add_argument("--topology", default="d_ada")
     ap.add_argument("--mixing", default="ppermute", choices=["ppermute", "dense"])
     ap.add_argument("--mix-every", type=int, default=1)
+    ap.add_argument("--mix-rounds", type=int, default=1,
+                    help="fuse H consecutive schedule steps per gossip round "
+                         "into one executable (GossipProgram.fuse)")
+    ap.add_argument("--fused-apply", action="store_true",
+                    help="run optimizer+gossip as one fused Pallas pass for "
+                         "all-PPermute programs (plain momentum-SGD only)")
     ap.add_argument("--k-floor", default="2",
                     help="Ada decay floor: an int, or 'one_peer' for the "
                          "time-varying one-peer exponential family")
@@ -535,10 +640,19 @@ def main() -> None:
     topo = make_topology(args.topology, g, k_floor=k_floor)
     trainer = SPMDTrainer(
         cfg, mesh, topo, get_optimizer(args.optimizer), collect_norms=True,
-        mixing=args.mixing, mix_every=args.mix_every, donate=False,
+        mixing=args.mixing, mix_every=args.mix_every,
+        mix_rounds=args.mix_rounds, fused_apply=args.fused_apply, donate=False,
     )
+    # report the apply path the step will ACTUALLY take: fused_apply falls
+    # back to the interpreter for non-PPermute programs (complete, dense)
+    apply_mode = "interpreter"
+    if args.fused_apply and trainer._use_fused(trainer._program_at(0, 0)):
+        apply_mode = "fused-pallas"
+    elif args.fused_apply:
+        apply_mode = "interpreter (program not fused-eligible)"
     print(topo.describe(), "| mesh", dict(mesh.shape), "| mixing", args.mixing,
-          "| engine", "shard_map" if trainer.use_shard_map else "stacked")
+          "| engine", "shard_map" if trainer.use_shard_map else "stacked",
+          "| rounds", args.mix_rounds, "| apply", apply_mode)
     n_progs = len(trainer.precompile_programs(args.steps // args.steps_per_epoch + 1))
     print(f"{n_progs} distinct mixing program(s) over the run")
     state = trainer.init_state(jax.random.PRNGKey(0))

@@ -30,6 +30,9 @@ class Optimizer(NamedTuple):
     state_specs: Callable[[PyTree], PyTree] = lambda param_specs: ()
     """Maps a logical param-spec tree to the optimizer-state spec tree
     (used by the launcher to shard optimizer state like its parameters)."""
+    hyper: Any = None
+    """Introspectable hyperparameters (``{"kind": ..., ...}``) for engines
+    that re-implement the update inside a fused kernel (``fused_apply``)."""
 
 
 def _zeros_like_f32(params: PyTree) -> PyTree:
@@ -68,7 +71,13 @@ def sgd(momentum: float = 0.9, weight_decay: float = 0.0, nesterov: bool = False
         return new_params, new_state
 
     state_specs = (lambda ps: ()) if momentum == 0.0 else (lambda ps: ps)
-    return Optimizer(init, update, f"sgd(m={momentum},wd={weight_decay})", state_specs)
+    return Optimizer(
+        init, update, f"sgd(m={momentum},wd={weight_decay})", state_specs,
+        hyper={
+            "kind": "sgd", "momentum": momentum,
+            "weight_decay": weight_decay, "nesterov": nesterov,
+        },
+    )
 
 
 def adamw(

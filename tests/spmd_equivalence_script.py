@@ -26,6 +26,8 @@ from repro.models import transformer as tfm
 from repro.optim.sgd import sgd
 
 TOPO = sys.argv[1] if len(sys.argv) > 1 else "d_ring"
+# "ppermute" | "dense" | "fused" (fused = compiled programs executed by the
+# fused Pallas optimizer+gossip kernel, still vs the dense-matrix oracle)
 MIXING = sys.argv[2] if len(sys.argv) > 2 else "ppermute"
 STEPS = 4
 G = 4  # gossip nodes (data axis), model axis = 2
@@ -42,7 +44,9 @@ key = jax.random.PRNGKey(42)
 
 # --- SPMD engine -------------------------------------------------------------
 trainer = SPMDTrainer(
-    cfg, mesh, topo, opt, collect_norms=True, mixing=MIXING, donate=False
+    cfg, mesh, topo, opt, collect_norms=True,
+    mixing="ppermute" if MIXING == "fused" else MIXING,
+    fused_apply=MIXING == "fused", donate=False,
 )
 state = trainer.init_state(key)
 losses_spmd = []

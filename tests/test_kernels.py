@@ -75,6 +75,150 @@ def test_gossip_update_sweep(p, deg, block, dtype):
     np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), atol=1e-5)
 
 
+def test_gossip_update_runtime_lr_beta_no_recompile():
+    """LR schedules must not retrigger compiles: lr/beta ride in SMEM at
+    runtime, so sweeping them leaves exactly one cached executable."""
+    from repro.kernels.gossip_update import _gossip_update
+
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    theta = jax.random.normal(ks[0], (512,))
+    nbr = jax.random.normal(ks[1], (2, 512))
+    w = jnp.full((3,), 1.0 / 3)
+    g = jax.random.normal(ks[2], (512,))
+    m = jax.random.normal(ks[3], (512,))
+    _gossip_update._clear_cache()
+    for lr, beta in [(0.1, 0.9), (0.05, 0.9), (0.01, 0.8), (0.2, 0.0)]:
+        o, mm = ops.gossip_update(theta, nbr, w, g, m, lr=lr, beta=beta, block=256)
+        o2, m2 = ref.gossip_update_ref(theta, nbr, w, g, m, lr=lr, beta=beta)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(o2), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(mm), np.asarray(m2), atol=1e-5)
+    assert _gossip_update._cache_size() == 1
+
+
+@pytest.mark.parametrize("graph_name", ["star", "ring", "one_peer", "matching", "irregular"])
+def test_fused_program_apply_matches_dense_oracle(graph_name):
+    """The per-node-weight Pallas executor == optimizer update followed by
+    the program's dense interpreter (PR-3 acceptance, <= 1e-6) on every
+    PPermute program class: circulant, matching, and edge-colored."""
+    from repro.core.graphs import (
+        Ring, Star, from_adjacency, one_peer_exponential, random_matching,
+    )
+    from repro.core.schedule import compile_graph
+    from repro.kernels.gossip_update import fused_apply_stacked
+    from repro.optim.sgd import sgd
+
+    graph = {
+        "star": lambda: Star(8),
+        "ring": lambda: Ring(8),
+        "one_peer": lambda: one_peer_exponential(8, 1),
+        "matching": lambda: random_matching(8, seed=3),
+        "irregular": lambda: from_adjacency(
+            [(0, 1), (1, 2), (2, 3), (0, 3), (0, 2), (4, 5), (5, 6), (6, 7)]
+        ),
+    }[graph_name]()
+    prog = compile_graph(graph)
+    n = prog.n
+    kp = jax.random.split(jax.random.PRNGKey(n), 4)
+    # deliberately non-block-aligned leaf sizes: exercises the zero-padding
+    params = {"a": jax.random.normal(kp[0], (n, 33, 7)),
+              "b": jax.random.normal(kp[1], (n, 10))}
+    grads = {"a": jax.random.normal(kp[2], (n, 33, 7)),
+             "b": jax.random.normal(kp[3], (n, 10))}
+    mom = jax.tree.map(jnp.zeros_like, params)
+    lr, beta = 0.07, 0.9
+    new_p, new_m = fused_apply_stacked(
+        prog, params, grads, mom, lr=lr, beta=beta, block=128
+    )
+    opt = sgd(momentum=beta)
+    up, um = jax.vmap(opt.update, in_axes=(0, 0, 0, None))(
+        grads, mom, params, jnp.float32(lr)
+    )
+    want = prog.apply_dense(up)
+    for k in params:
+        np.testing.assert_allclose(
+            np.asarray(new_p[k]), np.asarray(want[k]), atol=1e-6, err_msg=k
+        )
+        np.testing.assert_allclose(np.asarray(new_m[k]), np.asarray(um[k]), atol=1e-6)
+
+
+def test_fused_program_apply_momentumless_and_pre_order():
+    """beta=0 keeps the empty () optimizer state; mix_order='pre' mixes the
+    raw params before descending (no theta* materialization on the wire)."""
+    from repro.core.graphs import Ring
+    from repro.core.schedule import compile_graph
+    from repro.kernels.gossip_update import fused_apply_stacked
+    from repro.optim.sgd import sgd
+
+    prog = compile_graph(Ring(8))
+    kp = jax.random.split(jax.random.PRNGKey(0), 2)
+    params = {"w": jax.random.normal(kp[0], (8, 50))}
+    grads = {"w": jax.random.normal(kp[1], (8, 50))}
+    new_p, new_m = fused_apply_stacked(
+        prog, params, grads, (), lr=0.1, beta=0.0, block=64
+    )
+    assert new_m == ()
+    opt = sgd(momentum=0.0)
+    up, _ = jax.vmap(opt.update, in_axes=(0, 0, 0, None))(
+        grads, (), params, jnp.float32(0.1)
+    )
+    want = prog.apply_dense(up)
+    np.testing.assert_allclose(np.asarray(new_p["w"]), np.asarray(want["w"]), atol=1e-6)
+
+    # pre-order: mix raw params first, then descend
+    mom = jax.tree.map(jnp.zeros_like, params)
+    new_p, _ = fused_apply_stacked(
+        prog, params, grads, mom, lr=0.1, beta=0.9, mix_order="pre", block=64
+    )
+    mixed = prog.apply_dense(params)
+    want = jax.tree.map(
+        lambda mx, g: mx - 0.1 * (0.9 * jnp.zeros_like(g) + g), mixed, grads
+    )
+    np.testing.assert_allclose(np.asarray(new_p["w"]), np.asarray(want["w"]), atol=1e-6)
+
+
+def test_fused_kernel_composes_with_multi_round_fusion():
+    """fused_apply × mix_rounds: kernel runs update + round 1, the stacked
+    interpreter the remaining rounds — together == the fused program's
+    dense product oracle (mirrors SPMDTrainer._fused_split)."""
+    from repro.core.graphs import one_peer_exponential
+    from repro.core.schedule import GossipProgram, compile_graph
+    from repro.kernels.gossip_update import fused_apply_stacked
+    from repro.optim.sgd import sgd
+
+    n = 8
+    progs = [compile_graph(one_peer_exponential(n, t)) for t in range(3)]
+    fused = GossipProgram.fuse(progs)
+    kp = jax.random.split(jax.random.PRNGKey(1), 2)
+    params = {"w": jax.random.normal(kp[0], (n, 40))}
+    grads = {"w": jax.random.normal(kp[1], (n, 40))}
+    mom = jax.tree.map(jnp.zeros_like, params)
+    lr, beta = 0.05, 0.9
+    new_p, _ = fused_apply_stacked(
+        fused.stages[0], params, grads, mom, lr=lr, beta=beta, block=40
+    )
+    for stage in fused.stages[1:]:
+        new_p = stage.apply_stacked(new_p)
+    opt = sgd(momentum=beta)
+    up, _ = jax.vmap(opt.update, in_axes=(0, 0, 0, None))(
+        grads, mom, params, jnp.float32(lr)
+    )
+    want = fused.apply_dense(up)
+    np.testing.assert_allclose(
+        np.asarray(new_p["w"]), np.asarray(want["w"]), atol=1e-5
+    )
+
+
+def test_fused_apply_rejects_non_permute_programs():
+    from repro.core.graphs import Complete, Ring
+    from repro.core.schedule import compile_graph, dense_program
+    from repro.kernels.gossip_update import fused_apply_stacked
+
+    params = {"w": jnp.ones((8, 16))}
+    for prog in (compile_graph(Complete(8)), dense_program(Ring(8))):
+        with pytest.raises(ValueError, match="PPermute"):
+            fused_apply_stacked(prog, params, params, (), lr=0.1, beta=0.0)
+
+
 @pytest.mark.parametrize("r,p,block", [(1, 512, 512), (7, 3000, 512), (16, 2048, 2048)])
 def test_l2_norms_sweep(r, p, block):
     x = jax.random.normal(jax.random.PRNGKey(r), (r, p))

@@ -129,11 +129,84 @@ def test_matchings_compile_to_single_permute_with_per_node_weights():
     assert len(prog.ops) == 1 and isinstance(prog.ops[0], PPermute)
 
 
-def test_irregular_graph_falls_back_to_gather_row():
-    g = Star(8)
+def test_star_compiles_to_edge_colored_permutes():
+    """Regression (PR 3 acceptance): the star must NOT dense all-gather —
+    it edge-colors into <= Δ+1 per-node-weighted permute rounds that
+    reproduce W exactly."""
+    for n in (8, 16, 64):
+        g = Star(n)
+        prog = compile_graph(g)
+        assert not any(isinstance(op, GatherRow) for op in prog.ops)
+        assert all(isinstance(op, PPermute) for op in prog.ops)
+        assert len(prog.ops) <= g.degree + 1
+        np.testing.assert_allclose(prog.matrix(), g.mixing_matrix(), atol=1e-12)
+
+
+def test_irregular_graph_compiles_sparse_and_exact():
+    g = from_adjacency([(0, 1), (1, 2), (2, 3), (0, 3), (0, 2)], name="irr")
     prog = compile_graph(g)
-    assert len(prog.ops) == 1 and isinstance(prog.ops[0], GatherRow)
-    np.testing.assert_allclose(prog.matrix(), g.mixing_matrix())
+    assert not any(isinstance(op, GatherRow) for op in prog.ops)
+    assert len(prog.ops) <= g.degree + 1
+    np.testing.assert_allclose(prog.matrix(), g.mixing_matrix(), atol=1e-12)
+
+
+@given(
+    st.integers(min_value=2, max_value=16),
+    st.integers(min_value=0, max_value=10_000),
+)
+@settings(max_examples=40, deadline=None)
+def test_edge_colored_program_matches_dense_oracle(n, seed):
+    """Property (PR 3 acceptance): on a random connected graph up to n=16
+    the edge-colored program equals W θ to <= 1e-6 under both interpreters,
+    using <= Δ+1 permute rounds and no GatherRow."""
+    rng = np.random.default_rng(seed)
+    # random spanning tree (guarantees connectivity) + random extra edges
+    edges = set()
+    perm = rng.permutation(n)
+    for a, b in zip(perm[:-1], perm[1:]):
+        edges.add((min(a, b), max(a, b)))
+    n_extra = int(rng.integers(0, n * (n - 1) // 2 + 1))
+    for _ in range(n_extra):
+        i, j = rng.integers(0, n, size=2)
+        if i != j:
+            edges.add((min(i, j), max(i, j)))
+    g = from_adjacency(sorted((int(i), int(j)) for i, j in edges))
+    prog = compile_graph(g)
+    assert not any(isinstance(op, GatherRow) for op in prog.ops)
+    assert len(prog.ops) <= g.degree + 1, (len(prog.ops), g.degree)
+    x = jnp.asarray(rng.normal(size=(n, 5)).astype(np.float32))
+    want = g.mixing_matrix() @ np.asarray(x)
+    for engine in ("dense", "stacked"):
+        got = np.asarray(prog.apply({"w": x}, engine=engine)["w"])
+        np.testing.assert_allclose(got, want, atol=1e-6, err_msg=engine)
+
+
+@given(
+    st.integers(min_value=2, max_value=18),
+    st.integers(min_value=0, max_value=10_000),
+)
+@settings(max_examples=40, deadline=None)
+def test_edge_coloring_is_proper_and_vizing_bounded(n, seed):
+    """Every color class is a matching, the classes cover each edge exactly
+    once, and at most Δ+1 colors are used (Vizing / Misra–Gries bound)."""
+    from repro.core.schedule import edge_coloring
+
+    rng = np.random.default_rng(seed)
+    all_e = [(i, j) for i in range(n) for j in range(i + 1, n)]
+    k = int(rng.integers(1, len(all_e) + 1))
+    edges = [all_e[i] for i in rng.choice(len(all_e), size=k, replace=False)]
+    deg = [0] * n
+    for i, j in edges:
+        deg[i] += 1
+        deg[j] += 1
+    classes = edge_coloring(n, edges)
+    seen = set()
+    for cls in classes:
+        nodes = [v for e in cls for v in e]
+        assert len(nodes) == len(set(nodes)), "color class is not a matching"
+        seen.update(cls)
+    assert seen == set(edges)
+    assert len(classes) <= max(deg) + 1, (len(classes), max(deg))
 
 
 def test_identity_program_is_noop():
@@ -286,6 +359,143 @@ def test_mix_every_advances_time_varying_phase():
         k for k in sim._step_cache if k not in ("__local__", "__centralized__")
     ]
     assert len(mix_keys) == period, mix_keys
+
+
+# ---------------------------------------------------------------------------
+# Multi-step program fusion
+# ---------------------------------------------------------------------------
+
+def test_fuse_matches_matrix_product_and_interpreters():
+    """fuse(P_1..P_H) realizes W_H ··· W_1 under every interpreter."""
+    from repro.core.schedule import FusedProgram
+
+    n = 16
+    progs = [
+        compile_graph(one_peer_exponential(n, t)) for t in range(one_peer_period(n))
+    ]
+    fused = GossipProgram.fuse(progs)
+    assert isinstance(fused, FusedProgram)
+    w = np.eye(n)
+    for p in progs:
+        w = p.matrix() @ w
+    np.testing.assert_allclose(fused.matrix(), w, atol=1e-12)
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(n, 4)).astype(np.float32))
+    want = w @ np.asarray(x)
+    for engine in ("dense", "stacked"):
+        got = np.asarray(fused.apply({"w": x}, engine=engine)["w"])
+        np.testing.assert_allclose(got, want, atol=1e-5, err_msg=engine)
+    # collectives add across rounds; fusion changes dispatch count, not wire
+    assert fused.num_collectives == sum(p.num_collectives for p in progs)
+
+
+def test_fuse_cache_keys_and_flattening():
+    n = 8
+    progs = [compile_graph(one_peer_exponential(n, t)) for t in range(3)]
+    a = GossipProgram.fuse(progs)
+    b = GossipProgram.fuse(progs)
+    assert a.cache_key == b.cache_key
+    assert a.cache_key != GossipProgram.fuse(progs[:2]).cache_key
+    # nested fusion flattens; a single plain program passes through as-is
+    assert GossipProgram.fuse([progs[0]]) is progs[0]
+    assert GossipProgram.fuse([a]).cache_key == a.cache_key
+    nested = GossipProgram.fuse([GossipProgram.fuse(progs[:2]), progs[2]])
+    assert nested.cache_key == a.cache_key
+    with pytest.raises(ValueError, match="at least one"):
+        GossipProgram.fuse([])
+    with pytest.raises(ValueError, match="different node counts"):
+        GossipProgram.fuse([progs[0], compile_graph(Ring(4))])
+
+
+def test_topology_fused_program_advances_phase_by_rounds():
+    """fused_program_at(rounds=H) covers schedule steps [sH, sH+H) — the
+    mixing budget is preserved, only the dispatch count drops."""
+    n = 16
+    topo = make_topology("d_one_peer_exp", n)
+    p = one_peer_period(n)
+    fused = topo.fused_program_at(step=0, rounds=p)
+    w = np.eye(n)
+    for t in range(p):
+        w = topo.program_at(step=t).matrix() @ w
+    np.testing.assert_allclose(fused.matrix(), w, atol=1e-12)
+    # a full-period fusion is step-invariant: one executable for the run
+    assert (
+        topo.fused_program_at(step=3, rounds=p).cache_key == fused.cache_key
+    )
+    # centralized topologies still have no program
+    assert make_topology("c_complete", n).fused_program_at(step=0, rounds=2) is None
+
+
+def test_simulator_mix_rounds_single_executable():
+    """H fused rounds land in ONE cached executable (vs H unfused)."""
+    import jax
+
+    from repro.core.simulator import DecentralizedSimulator
+    from repro.optim.sgd import sgd
+
+    def loss(p, b):
+        return jnp.mean((b - p["w"]) ** 2)
+
+    n = 8
+    period = one_peer_period(n)
+    topo = make_topology("d_one_peer_exp", n)
+    fused_sim = DecentralizedSimulator(
+        loss, sgd(momentum=0.0), topo, mix_rounds=period
+    )
+    state = fused_sim.init({"w": jnp.full((4,), 0.3)})
+    params0 = state.params
+    b = jax.random.normal(jax.random.PRNGKey(9), (n, 2, 4))
+    state, *_ = fused_sim.train_step(state, b, 0.05)
+    for t in range(1, 2 * period):
+        state, *_ = fused_sim.train_step(
+            state, jax.random.normal(jax.random.PRNGKey(t), (n, 2, 4)), 0.05
+        )
+    keys = [
+        k for k in fused_sim._step_cache if k not in ("__local__", "__centralized__")
+    ]
+    assert len(keys) == 1, keys
+    # numerics: first fused step == grad step then the full one-peer cycle
+    g = jax.vmap(jax.grad(loss))(params0, b)
+    want = jax.tree.map(lambda p, gg: p - 0.05 * gg, params0, g)
+    for t in range(period):
+        want = topo.program_at(step=t).apply_dense(want)
+    state2 = fused_sim.init({"w": jnp.full((4,), 0.3)})
+    state2, *_ = fused_sim.train_step(state2, b, 0.05)
+    np.testing.assert_allclose(
+        np.asarray(state2.params["w"]), np.asarray(want["w"]), atol=1e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# Permute tables (the fused-kernel view of a program)
+# ---------------------------------------------------------------------------
+
+def test_permute_tables_reconstruct_matrix():
+    """srcs/weights tables are an exact dense view of any PPermute program."""
+    for g in [Star(8), Ring(8), one_peer_exponential(8, 1),
+              random_matching(8, seed=4),
+              from_adjacency([(0, 1), (1, 2), (2, 3), (0, 3), (0, 2)])]:
+        prog = compile_graph(g)
+        tables = prog.permute_tables()
+        assert tables is not None, prog.describe()
+        srcs, weights = tables
+        n = prog.n
+        assert srcs.shape == (n, len(prog.ops))
+        assert weights.shape == (n, len(prog.ops) + 1)
+        w = np.zeros((n, n))
+        w[np.arange(n), np.arange(n)] += weights[:, 0]
+        for k in range(len(prog.ops)):
+            for d in range(n):
+                w[d, srcs[d, k]] += weights[d, k + 1]
+        np.testing.assert_allclose(w, g.mixing_matrix(), atol=1e-6)
+
+
+def test_permute_tables_none_for_non_permute_programs():
+    assert compile_graph(Complete(8)).permute_tables() is None
+    assert dense_program(Ring(8)).permute_tables() is None
+    fused = GossipProgram.fuse(
+        [compile_graph(one_peer_exponential(8, t)) for t in range(2)]
+    )
+    assert fused.permute_tables() is None
 
 
 # ---------------------------------------------------------------------------
