@@ -1,85 +1,161 @@
-"""Paper Figure 7: Ada vs static graphs (convergence + communication cost).
+"""Paper Figure 7 + the Ada accuracy-vs-cost frontier.
 
-Derived: final eval + total communication volume.  The paper's claim: Ada
-converges like the highly-connected graphs while its late-stage cost decays
-to ring cost.
+Ada vs static graphs (convergence + communication cost), extended with the
+ROADMAP's frontier sweep: *fixed-γ open-loop* Ada (epoch time law,
+one-peer floor) vs *closed-loop* Ada (consensus-distance-triggered decay
+and handoff, ``core/consensus.py``) vs the static baselines, with total
+communication volume as the cost axis.  The paper's claim: Ada converges
+like the highly-connected graphs while its late-stage cost decays to
+ring/one-peer cost; the closed-loop variant finds the handoff from the
+run's own variance signal.
+
+Communication accounting is **step-granular**: each step is billed the
+bytes of the compiled ``GossipProgram`` actually in force at that step
+(``Topology.program_at(step=t, epoch=e)`` + ``program_comm_bytes``), so
+time-varying phases — the one-peer floor, matchings — cost what they move,
+not the step-0 graph.  Closed-loop runs replay the controller's recorded
+rung trace (``ConsensusController.rung_at``).
+
+Results: accuracy is mean±std over seeds, us_per_step is averaged over
+seeds, and the frontier lands both in benchmarks/results/ada.json and in
+the committed ``BENCH_step_time.json`` ``ada`` section
+(``save_bench_section``) so it is comparable across PRs.
 """
 from __future__ import annotations
 
 import jax
 
-from benchmarks.common import Row, save_json, sweep_topologies
-from repro.core.dsgd import make_topology
-from repro.core.mixing import mixing_comm_bytes
-from repro.models.common import init_params, param_count
-from repro.models.paper_models import (
-    mini_resnet_defs, mini_resnet_loss,
-)
+from benchmarks.common import Row, save_bench_section, save_json, sweep_topologies
+from repro.core.dsgd import Topology
+from repro.core.graphs import Complete
+from repro.core.mixing import _tree_bytes
+from repro.core.schedule import compile_graph, program_comm_bytes
+from repro.models.common import init_params
+from repro.models.paper_models import mini_resnet_defs, mini_resnet_loss
 from repro.optim.sgd import sgd
 from benchmarks.accuracy_graphs import _batch_fn, _eval_fn
 
-TOPOLOGIES = ["c_complete", "d_torus", "d_ring", "d_ada"]
 N = 16
 STEPS_PER_EPOCH = 5
 
+# label -> (topology name, make_topology kwargs).  Both Ada variants decay
+# onto the one-peer family; the closed-loop one replaces the γ time law
+# with the measured consensus-distance trigger.
+CONFIGS = [
+    ("c_complete", "c_complete", {}),
+    ("d_torus", "d_torus", {}),
+    ("d_ring", "d_ring", {}),
+    ("d_ada_fixed", "d_ada",
+     {"k0": 12, "gamma_k": 1.0, "k_floor": "one_peer"}),
+    ("d_ada_closed", "d_ada",
+     {"k0": 12, "k_floor": "one_peer", "consensus_target": 0.7,
+      "consensus_probe_every": STEPS_PER_EPOCH}),  # probe once per epoch
+]
 
-def _total_comm(topology_name, n, steps, params0, **kw):
-    topo = make_topology(topology_name, n, **kw)
+
+def _total_comm(
+    topo: Topology, steps: int, params0, steps_per_epoch: int = STEPS_PER_EPOCH
+) -> int:
+    """Total bytes each node sends over ``steps``, billed per step.
+
+    ``topo`` should be the Topology the run actually used: a closed-loop
+    controller's realized schedule is replayed from its transition log, so
+    the cost reflects the graphs the run selected, not a fixed time law.
+    Closed-loop runs are additionally billed their consensus probes —
+    computing x̄ is one all-reduce of the parameter tree per probe
+    (2·P·(n-1)/n per node, like any ring all-reduce), the honest price of
+    the control signal.
+    """
+    pbytes = _tree_bytes(params0)
+    n = topo.n_nodes
+    ctl = topo.controller
     total = 0
     for t in range(steps):
-        g = topo.graph_at(t // STEPS_PER_EPOCH)
-        if g is None:  # centralized: gradient all-reduce
-            from repro.core.graphs import Complete
-
-            total += mixing_comm_bytes(Complete(n), params0)
+        epoch = t // steps_per_epoch
+        if ctl is not None:
+            with ctl.pinned(ctl.rung_at(t)):
+                prog = topo.program_at(step=t, epoch=epoch)
+            if ctl.should_probe(t):
+                total += int(2 * pbytes * (n - 1) / n)
         else:
-            total += mixing_comm_bytes(g, params0)
+            prog = topo.program_at(step=t, epoch=epoch)
+        if prog is None:  # centralized: gradient all-reduce == complete graph
+            prog = compile_graph(Complete(n))
+        total += program_comm_bytes(prog, pbytes)
     return total
 
 
-ADA_KW = {"k0": 12, "gamma_k": 1.0}  # dense first ~10 epochs, ring after
-
-
-def run(steps: int = 120, seeds=(0, 1, 2)) -> list[Row]:
+def run(steps: int = 120, seeds=(0, 1, 2), quick: bool = False) -> list[Row]:
     """Multi-seed: single-run accuracy noise at this scale (~±0.05) would
     otherwise swamp the topology effect the paper reports."""
     import numpy as np
 
+    if quick:  # 2-CPU box tier: benchmarks/run.py --quick --only ada
+        steps, seeds = min(steps, 20), tuple(seeds)[:2]
+
     params0 = init_params(mini_resnet_defs(), jax.random.PRNGKey(0))
-    accs = {t: [] for t in TOPOLOGIES}
-    us = {t: 0.0 for t in TOPOLOGIES}
+    labels = [label for label, _, _ in CONFIGS]
+    accs = {l: [] for l in labels}
+    us = {l: [] for l in labels}
+    comms = {l: [] for l in labels}
+    handoffs = {l: [] for l in labels}
     for seed in seeds:
         res = sweep_topologies(
             loss_fn=mini_resnet_loss,
             params0=params0,
             batch_fn=_batch_fn,
             eval_fn=_eval_fn,
-            topologies=TOPOLOGIES,
+            topologies=[(label, name) for label, name, _ in CONFIGS],
             n_nodes=N,
             steps=steps,
             lr=0.1,
             optimizer=sgd(momentum=0.9),
             steps_per_epoch=STEPS_PER_EPOCH,
-            topo_kwargs={"d_ada": ADA_KW},
+            topo_kwargs={label: kw for label, _, kw in CONFIGS},
             seed=seed,
             collect_norms=False,
         )
-        for name, r in res.items():
-            accs[name].append(r["final_eval"])
-            us[name] = r["us_per_step"]
-    rows, payload = [], {}
-    for name in TOPOLOGIES:
-        kw = ADA_KW if name == "d_ada" else {}
-        comm = _total_comm(name, N, steps, params0, **kw)
-        mean, std = float(np.mean(accs[name])), float(np.std(accs[name]))
+        for label, r in res.items():
+            accs[label].append(r["final_eval"])
+            us[label].append(r["us_per_step"])
+            comms[label].append(_total_comm(r["topology"], steps, params0))
+            ctl = r["topology"].controller
+            if ctl is not None:
+                handoffs[label].append(ctl.handoff_step)
+
+    rows, payload, frontier = [], {}, {}
+    for label in labels:
+        acc_mean = float(np.mean(accs[label]))
+        acc_std = float(np.std(accs[label]))
+        us_mean = float(np.mean(us[label]))
+        us_std = float(np.std(us[label]))
+        comm_mean = float(np.mean(comms[label]))
         rows.append(
             Row(
-                f"fig7/{name}/n{N}",
-                us[name],
-                f"acc={mean:.3f}±{std:.3f} comm_MB={comm/2**20:.1f}",
+                f"fig7/{label}/n{N}",
+                us_mean,
+                f"acc={acc_mean:.3f}±{acc_std:.3f} comm_MB={comm_mean/2**20:.1f}",
             )
         )
-        payload[name] = {"acc_mean": mean, "acc_std": std, "accs": accs[name],
-                         "comm_bytes": comm}
+        payload[label] = {
+            "acc_mean": acc_mean, "acc_std": acc_std, "accs": accs[label],
+            "us_per_step_mean": us_mean, "us_per_step_std": us_std,
+            "comm_bytes_mean": comm_mean, "comm_bytes": comms[label],
+            "handoff_steps": handoffs[label],
+        }
+        frontier[f"{label}/n{N}"] = {
+            "acc_mean": acc_mean,
+            "acc_std": acc_std,
+            "comm_bytes_per_node": comm_mean,
+            "us_per_step_mean": us_mean,
+            "steps": steps,
+            "seeds": len(accs[label]),
+            **(
+                {"handoff_steps": handoffs[label]}
+                if handoffs[label]
+                else {}
+            ),
+        }
     save_json("ada", payload)
+    save_bench_section("ada", frontier)
     return rows

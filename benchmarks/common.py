@@ -76,7 +76,7 @@ def sweep_topologies(
     params0,
     batch_fn: Callable[[jax.Array, int, int], dict],  # (key, step, n) -> stacked batch
     eval_fn: Callable | None,
-    topologies: list[str],
+    topologies: list,
     n_nodes: int,
     steps: int,
     lr: float,
@@ -86,16 +86,26 @@ def sweep_topologies(
     topo_kwargs: dict | None = None,
     collect_norms: bool = True,
 ):
-    """Run every SGD implementation on identical data; return per-topo results."""
+    """Run every SGD implementation on identical data; return per-topo results.
+
+    ``topologies`` entries are either a topology name, or a ``(label,
+    name)`` pair so the same topology can appear twice with different
+    hyperparameters (``topo_kwargs`` is keyed by label) — e.g. open-loop vs
+    closed-loop Ada in the frontier sweep.
+    """
     out = {}
-    for name in topologies:
-        kw = (topo_kwargs or {}).get(name, {})
+    for entry in topologies:
+        label, name = (entry, entry) if isinstance(entry, str) else entry
+        kw = (topo_kwargs or {}).get(label, {})
         topo = make_topology(name, n_nodes, **kw)
         sim = DecentralizedSimulator(
             loss_fn, optimizer, topo, collect_norms=collect_norms
         )
+        # capture BEFORE the run: a closed-loop controller's graph_at
+        # follows its live rung, which ends the run at the final graph
+        degree0 = topo.degree_at(0)
         state = sim.init(params0)
-        rec = DBenchRecorder(impl=name, n_nodes=n_nodes)
+        rec = DBenchRecorder(impl=label, n_nodes=n_nodes)
         key = jax.random.PRNGKey(seed)
         t0 = time.perf_counter()
         losses = []
@@ -111,11 +121,14 @@ def sweep_topologies(
         final_eval = (
             float(eval_fn(state.mean_params())) if eval_fn is not None else float("nan")
         )
-        out[name] = {
+        out[label] = {
             "losses": losses,
             "final_eval": final_eval,
             "us_per_step": 1e6 * wall / steps,
             "recorder": rec,
-            "comm_degree": topo.degree_at(0),
+            "comm_degree": degree0,
+            # the run's Topology: closed-loop controllers carry the realized
+            # schedule trace, which comm accounting replays
+            "topology": topo,
         }
     return out

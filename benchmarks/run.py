@@ -45,7 +45,10 @@ def main() -> None:
             scales=(8,) if small else (8, 16),
         ),
         "variance": lambda: variance.run(steps=15 if args.quick else (30 if args.fast else 50)),
-        "ada": lambda: ada.run(steps=20 if args.quick else (40 if args.fast else 120)),
+        "ada": lambda: ada.run(
+            steps=20 if args.quick else (40 if args.fast else 120),
+            quick=args.quick,
+        ),
         "lr_scaling": lambda: lr_scaling.run(steps=15 if args.quick else (30 if args.fast else 40)),
     }
     if args.only:

@@ -17,6 +17,17 @@ The schedule then becomes step-granular; ``graph_at(epoch, step)`` /
 ``distinct_programs`` expose it, and both engines cache one executable per
 distinct ``GossipProgram`` (a handful per run, compiled at first use).
 
+Closed-loop variant (``core/consensus.py``): this module's schedule is the
+*open-loop* time law.  Passing ``consensus_target=`` to ``make_topology``
+wraps the same schedule in a ``ConsensusController`` that walks the ladder
+``k0, k0-1, …, 2[, one_peer]`` on a measured trigger instead — each probe
+compares the on-device consensus distance Ξ_t = √(1/n Σ_i ‖x_i - x̄‖²)
+(arXiv:2102.04828) against ``target · Ξ_0`` and steps down one rung when it
+crosses, so both the k-decay *and* the one-peer handoff epoch come from the
+run's own variance signal, not the γ·epoch constant.  The controller can
+only select among the ladder's pre-enumerated programs, preserving the
+zero-mid-run-recompiles invariant.
+
 Paper defaults (Table 4):
     ResNet20 / DenseNet100 / LSTM @ 96 GPUs : k0 = 10,  gamma_k = 0.02
     ResNet50 @ 1008 GPUs                    : k0 = 112, gamma_k = 1

@@ -117,6 +117,27 @@ def variance_report(norms: np.ndarray) -> dict[str, np.ndarray]:
 # Rank analysis (paper Figure 5)
 # ---------------------------------------------------------------------------
 
+def _average_ranks(a: np.ndarray) -> np.ndarray:
+    """1-based ranks along axis 0 with ties averaged (scipy ``rankdata``
+    "average" method): equal values share the mean of the positions they
+    span, so e.g. an all-equal column ranks every entry (I+1)/2."""
+    a = np.asarray(a, dtype=np.float64)
+    n = a.shape[0]
+    flat = a.reshape(n, -1)
+    out = np.empty_like(flat)
+    for j in range(flat.shape[1]):
+        col = flat[:, j]
+        order = np.argsort(col, kind="stable")
+        i = 0
+        while i < n:
+            k = i
+            while k + 1 < n and col[order[k + 1]] == col[order[i]]:
+                k += 1
+            out[order[i : k + 1], j] = 0.5 * (i + k) + 1.0  # mean of i+1..k+1
+            i = k + 1
+    return out.reshape(a.shape)
+
+
 def rank_analysis(
     per_impl_metric: Mapping[str, np.ndarray]
 ) -> dict[str, np.ndarray]:
@@ -129,14 +150,13 @@ def rank_analysis(
     Returns:
       impl name -> (n_iters,) mean rank across leaves (1 = lowest variance,
       len(impls) = highest), the paper's integration device for comparing
-      topologies across heterogeneous parameters.
+      topologies across heterogeneous parameters.  Ties get *average* ranks
+      (scipy-style): equal-dispersion implementations tie in the Fig-5 rank
+      curves instead of being split by dictionary order.
     """
     names = sorted(per_impl_metric)
     stack = np.stack([np.atleast_2d(per_impl_metric[k]) for k in names])  # (I, T, L)
-    order = np.argsort(stack, axis=0, kind="stable")
-    ranks = np.empty_like(order)
-    idx = np.indices(order.shape)
-    ranks[order, idx[1], idx[2]] = idx[0] + 1  # 1-based ranks along impl axis
+    ranks = _average_ranks(stack)
     return {k: ranks[i].mean(axis=-1) for i, k in enumerate(names)}
 
 

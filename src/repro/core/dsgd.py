@@ -10,7 +10,10 @@ time-varying families:
   d_exponential     decentralized, directed exponential graph
   d_ring_lattice    decentralized, static ring lattice (coordination number k)
   d_ada             decentralized, Ada adaptive ring lattice (Algorithm 1);
-                    ``k_floor="one_peer"`` decays onto the one-peer family
+                    ``k_floor="one_peer"`` decays onto the one-peer family;
+                    ``consensus_target=`` closes the loop — measured
+                    consensus distance (core/consensus.py) drives the decay
+                    and the handoff instead of the epoch law
   d_one_peer_exp    decentralized, one-peer time-varying exponential
                     (degree 1 per step, arXiv:2410.11998)
   d_random_matching decentralized, seeded random pairwise averaging rotating
@@ -38,6 +41,7 @@ import dataclasses
 from typing import Any, Optional
 
 from repro.core.ada import AdaSchedule, default_k0
+from repro.core.consensus import ConsensusController
 from repro.core.graphs import (
     CommGraph, make_graph, one_peer_exponential, one_peer_period,
     random_matching,
@@ -130,12 +134,21 @@ class Topology:
     static_graph: Optional[CommGraph] = None
     ada: Optional[AdaSchedule] = None
     sequence: Optional[GraphSequence] = None
+    controller: Optional[ConsensusController] = None
     mix_order: str = "post"  # "post" | "pre"
 
     def graph_at(self, epoch: int = 0, step: int = 0) -> Optional[CommGraph]:
-        """The parameter-mixing graph in force; None => centralized."""
+        """The parameter-mixing graph in force; None => centralized.
+
+        With a ``controller`` (closed-loop Ada) the graph follows the
+        controller's *current rung* — the measured consensus-distance
+        signal, fed by the engines via ``controller.observe``, selects it
+        instead of the open-loop epoch law.
+        """
         if self.centralized:
             return None
+        if self.controller is not None:
+            return self.controller.graph_at(epoch, step)
         if self.sequence is not None:
             return self.sequence.graph_at(step)
         if self.ada is not None:
@@ -171,6 +184,8 @@ class Topology:
 
     def period_at(self, epoch: int = 0) -> int:
         """Steps before the program repeats within an epoch (1 = static)."""
+        if self.controller is not None:
+            return self.controller.period_steps()
         if self.sequence is not None:
             return self.sequence.period_steps()
         if self.ada is not None:
@@ -184,12 +199,25 @@ class Topology:
         program over a run — the bounded executable set an engine caches.
 
         Generalizes ``AdaSchedule.distinct_graphs`` to step-granular and
-        randomized-with-pool topologies.
+        randomized-with-pool topologies.  For a closed-loop controller the
+        first key component is the *rung* index instead of an epoch: the
+        measured signal decides when each rung activates, but the set it
+        can select from is the controller's ladder, pinned rung by rung
+        here — closed-loop adaptation compiles nothing beyond this set.
         """
         if self.centralized:
             return []
         out: list[tuple[tuple[int, int], GossipProgram]] = []
         seen = set()
+        if self.controller is not None:
+            for r in range(len(self.controller.ladder)):
+                with self.controller.pinned(r):
+                    for s in range(self.period_at(0)):
+                        prog = self.program_at(step=s, epoch=0)
+                        if prog is not None and prog.cache_key not in seen:
+                            seen.add(prog.cache_key)
+                            out.append(((r, s), prog))
+            return out
         for e in range(max(int(n_epochs), 1)):
             for s in range(self.period_at(e)):
                 prog = self.program_at(step=s, epoch=e)
@@ -203,8 +231,17 @@ class Topology:
         return self.ada is not None
 
     @property
+    def closed_loop(self) -> bool:
+        """Is the schedule driven by measured consensus distance?"""
+        return self.controller is not None
+
+    @property
     def time_varying(self) -> bool:
-        """Does the graph change within an epoch (step-granular schedules)?"""
+        """Does the graph (possibly) change within an epoch?  True for any
+        closed-loop controller: rung transitions fire at measured steps,
+        not epoch boundaries, regardless of the ladder's floor."""
+        if self.controller is not None:
+            return True
         if self.sequence is not None:
             return self.sequence.period_steps() > 1
         return self.ada is not None and self.ada.k_floor == "one_peer"
@@ -216,6 +253,11 @@ class Topology:
     def describe(self) -> str:
         if self.centralized:
             return f"{self.name}: centralized all-reduce over {self.n_nodes} nodes"
+        if self.controller is not None:
+            return (
+                f"{self.name}: closed-loop Ada ({self.controller.describe()}) "
+                f"over {self.n_nodes} nodes"
+            )
         if self.ada is not None:
             return (
                 f"{self.name}: Ada ring-lattice k0={self.ada.k0} "
@@ -237,13 +279,15 @@ def make_topology(
     *,
     k: int | None = None,
     k0: int | None = None,
-    gamma_k: float = 0.02,
+    gamma_k: float | None = None,
     k_floor: int | str = 2,
     seed: int = 0,
     pool: int = 8,
     mix_order: str = "post",
     torus_grid: tuple[int, int] | None = None,
     adjacency: Any = None,
+    consensus_target: float | None = None,
+    consensus_probe_every: int = 1,
 ) -> Topology:
     """Build one of the benchmarked topologies.
 
@@ -252,11 +296,22 @@ def make_topology(
       n_nodes: gossip node count (the training scale).
       k: coordination number for ``d_ring_lattice``.
       k0, gamma_k, k_floor: Ada hyperparameters (default k0: paper's
-        max(n//9, 2); k_floor="one_peer" decays onto the one-peer family).
+        max(n//9, 2), default gamma_k: the paper's 0.02; k_floor="one_peer"
+        decays onto the one-peer family).  gamma_k is the open-loop time
+        law and is rejected together with consensus_target.
       seed, pool: ``d_random_matching`` randomness and precompiled-pool size.
+      consensus_target: ``d_ada`` only — close the loop: drive the k-decay
+        and one-peer handoff from the measured consensus-distance ratio
+        Ξ_t/Ξ_0 crossing this target (arXiv:2102.04828) instead of the
+        open-loop epoch law.  ``consensus_probe_every`` sets the probe
+        cadence in training steps.
     """
     if mix_order not in ("post", "pre"):
         raise ValueError(f"mix_order must be 'post'|'pre', got {mix_order!r}")
+    if consensus_target is not None and name != "d_ada":
+        raise ValueError(
+            f"consensus_target is a d_ada (closed-loop Ada) option; got {name!r}"
+        )
     base = dict(name=name, n_nodes=n_nodes, mix_order=mix_order)
     if name == "c_complete":
         return Topology(centralized=True, **base)
@@ -275,13 +330,29 @@ def make_topology(
             raise ValueError("d_ring_lattice requires k")
         return Topology(static_graph=make_graph("ring_lattice", n_nodes, k=k), **base)
     if name == "d_ada":
+        if consensus_target is not None and gamma_k is not None:
+            # the controller never consults the time law: a gamma_k sweep
+            # with the closed loop on would silently report duplicates
+            raise ValueError(
+                "gamma_k is the open-loop time law and is unused with "
+                "consensus_target; pass one or the other"
+            )
         sched = AdaSchedule(
             n_nodes=n_nodes,
             k0=k0 if k0 is not None else default_k0(n_nodes),
-            gamma_k=gamma_k,
+            gamma_k=0.02 if gamma_k is None else gamma_k,
             k_floor=k_floor,
         )
-        return Topology(ada=sched, **base)
+        ctl = (
+            ConsensusController(
+                schedule=sched,
+                target=consensus_target,
+                probe_every=consensus_probe_every,
+            )
+            if consensus_target is not None
+            else None
+        )
+        return Topology(ada=sched, controller=ctl, **base)
     if name == "d_one_peer_exp":
         return Topology(sequence=OnePeerSequence(n_nodes), **base)
     if name == "d_random_matching":

@@ -17,6 +17,13 @@ Time-varying topologies (one-peer exponential, random-matching pools, Ada
 with ``k_floor="one_peer"``) are step-granular: the step function is cached
 per compiled program, so a run compiles each member of a small bounded set
 (``Topology.distinct_programs``) once at first use and never recompiles.
+
+Closed-loop Ada (``Topology.controller``): before a probe step the engine
+computes the consensus distance Ξ_t on-device (one jitted stacked
+reduction, ``core/consensus.py``) and feeds it to the controller, which may
+step the schedule down one rung.  The controller only selects among the
+pre-enumerated ladder programs, so the cached-executable bound holds
+unchanged.
 """
 from __future__ import annotations
 
@@ -185,6 +192,11 @@ class DecentralizedSimulator:
         Returns:
           (new_state, per_node_loss (n,), per_node_norms (n, n_leaves)).
         """
+        ctl = self.topology.controller
+        if ctl is not None and ctl.should_probe(state.step):
+            from repro.core.consensus import consensus_distance_jit
+
+            ctl.observe(float(consensus_distance_jit(state.params)), state.step)
         mix = (state.step + 1) % self.mix_every == 0
         # index time-varying schedules by gossip round (see SPMDTrainer):
         # raw-step indexing under mix_every=H would alias period-p families

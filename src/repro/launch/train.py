@@ -26,6 +26,13 @@ use, and switch cached executables at (epoch, step) boundaries thereafter:
 graph adaptation costs zero recompiles beyond that bounded set and zero
 host sync.
 
+Closed-loop Ada (``--consensus-target``): before a probe step the trainer
+computes the consensus distance Ξ_t over the gossip-stacked global state
+(one jitted reduction, ``core/consensus.py``) and feeds it to the
+topology's ``ConsensusController``; the measured ratio Ξ_t/Ξ_0 — not the
+epoch law — steps the schedule down its pre-enumerated ladder, so the
+bounded-executable-set invariant holds unchanged.
+
 jax-version note: partial-manual shard_map needs the modern manual-axes API
 (``repro/compat.py``).  On old jax (0.4.37 in this container) the trainer
 transparently switches to the *stacked* GSPMD realization — vmap over the
@@ -220,8 +227,16 @@ class SPMDTrainer:
             return []
         progs = []
         seen = set()
+        ctl = self.topology.controller
         for (e, s), _ in self.topology.distinct_programs(n_epochs):
-            p = self._program_at(s, e)
+            if ctl is not None:
+                # Closed-loop keys are (rung, phase): pin the rung so this
+                # trainer's own transforms (dense / mix_rounds fusion) see
+                # the program the step cache will be keyed on.
+                with ctl.pinned(e):
+                    p = self._program_at(s, 0)
+            else:
+                p = self._program_at(s, e)
             if p is not None and p.cache_key not in seen:
                 seen.add(p.cache_key)
                 progs.append(p)
@@ -514,6 +529,13 @@ class SPMDTrainer:
 
     # -- public API ------------------------------------------------------------------
     def train_step(self, state: TrainState, batch: PyTree, lr: float, *, epoch: int = 0):
+        ctl = self.topology.controller
+        if ctl is not None and self.g > 1 and ctl.should_probe(state.step):
+            from repro.core.consensus import consensus_distance_jit
+
+            with _set_mesh(self.mesh):
+                xi = consensus_distance_jit(state.params)
+            ctl.observe(float(xi), state.step)
         mix = (state.step + 1) % self.mix_every == 0
         # Time-varying schedules advance per *gossip round*, not per raw
         # step: with mix_every=H only every H-th step mixes, and indexing by
@@ -594,6 +616,12 @@ def main() -> None:
     ap.add_argument("--k-floor", default="2",
                     help="Ada decay floor: an int, or 'one_peer' for the "
                          "time-varying one-peer exponential family")
+    ap.add_argument("--consensus-target", type=float, default=None,
+                    help="close the Ada loop: step the schedule down a rung "
+                         "whenever measured consensus distance falls to this "
+                         "fraction of its initial value (d_ada only)")
+    ap.add_argument("--consensus-every", type=int, default=1,
+                    help="consensus-distance probe cadence in steps")
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--steps-per-epoch", type=int, default=10)
     ap.add_argument("--seq", type=int, default=64)
@@ -637,7 +665,11 @@ def main() -> None:
             raise SystemExit(
                 f"--k-floor must be an integer or 'one_peer', got {args.k_floor!r}"
             )
-    topo = make_topology(args.topology, g, k_floor=k_floor)
+    topo = make_topology(
+        args.topology, g, k_floor=k_floor,
+        consensus_target=args.consensus_target,
+        consensus_probe_every=args.consensus_every,
+    )
     trainer = SPMDTrainer(
         cfg, mesh, topo, get_optimizer(args.optimizer), collect_norms=True,
         mixing=args.mixing, mix_every=args.mix_every,
@@ -674,6 +706,13 @@ def main() -> None:
 
             save_checkpoint(args.ckpt_dir, t + 1, {"p": state.params, "o": state.opt_state})
     print(f"{args.steps} steps in {time.time()-t0:.1f}s")
+    if topo.controller is not None:
+        ctl = topo.controller
+        rungs = " -> ".join(str(ctl.ladder[r]) for _, r in [(0, 0)] + ctl.transitions)
+        print(
+            f"consensus controller: xi0={ctl.xi0} rungs {rungs} "
+            f"handoff_step={ctl.handoff_step}"
+        )
 
 
 if __name__ == "__main__":

@@ -1,0 +1,96 @@
+"""Subprocess body for test_spmd.py: closed-loop Ada on both engines.
+
+Runs consensus-distance-triggered Ada (``consensus_target``) through (a)
+the production SPMD trainer and (b) the vmap/dense-matrix simulator with
+identical init/data, and checks that BOTH engines
+
+  * observe the same consensus signal and pick the SAME graph sequence
+    (identical controller transition logs — the closed loop is engine-
+    agnostic),
+  * hand off to the one-peer family at a measured step (not the open-loop
+    k<2 epoch), and
+  * agree on the final parameters to float32 round-off, while compiling
+    no executable beyond the pre-enumerated ladder programs.
+
+A sharply decaying lr makes the consensus ratio cross the target within a
+few steps so the whole ladder is exercised in a short run.
+"""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.dsgd import make_topology
+from repro.core.simulator import DecentralizedSimulator
+from repro.data import SyntheticLM
+from repro.launch.mesh import make_mesh
+from repro.launch.train import SPMDTrainer
+from repro.models import transformer as tfm
+from repro.optim.sgd import sgd
+
+STEPS = 8
+G = 4  # gossip nodes (data axis), model axis = 2
+TARGET = 0.6
+ADA_KW = dict(k0=3, k_floor="one_peer", consensus_target=TARGET)
+
+cfg = dataclasses.replace(
+    get_config("granite-8b-reduced"), name="granite-8b", dtype=jnp.float32,
+    remat=False,
+)
+mesh = make_mesh((G, 2), ("data", "model"))
+opt = sgd(momentum=0.9)
+src = SyntheticLM(vocab=cfg.vocab, seq_len=16, seed=0)
+key = jax.random.PRNGKey(42)
+
+
+def lr_at(t):
+    return 0.05 * (0.5 ** t)  # sharp decay -> the ratio crosses in-run
+
+
+# --- SPMD engine -----------------------------------------------------------
+topo_spmd = make_topology("d_ada", G, **ADA_KW)
+trainer = SPMDTrainer(cfg, mesh, topo_spmd, opt, donate=False)
+allowed = {p.cache_key for p in trainer.precompile_programs()}
+state = trainer.init_state(key)
+for t in range(STEPS):
+    batch = {k: jnp.asarray(v) for k, v in src.stacked(G, t, 2).items()}
+    state, loss, _ = trainer.train_step(state, batch, lr_at(t), epoch=0)
+
+used = set(trainer._step_cache)
+assert used <= allowed, f"executables beyond the ladder: {used - allowed}"
+
+# --- simulator oracle ------------------------------------------------------
+topo_sim = make_topology("d_ada", G, **ADA_KW)
+sim = DecentralizedSimulator(
+    lambda p, b: tfm.loss_fn(p, cfg, b), opt, topo_sim, mixing="dense"
+)
+sim_state = sim.init(tfm.init_model(cfg, key, tp_size=2))
+for t in range(STEPS):
+    batch = {k: jnp.asarray(v) for k, v in src.stacked(G, t, 2).items()}
+    sim_state, loss, _ = sim.train_step(sim_state, batch, lr_at(t), epoch=0)
+
+ctl_spmd, ctl_sim = topo_spmd.controller, topo_sim.controller
+print("spmd transitions:", ctl_spmd.transitions)
+print("sim  transitions:", ctl_sim.transitions)
+assert ctl_spmd.transitions == ctl_sim.transitions, "engines disagree on schedule"
+assert ctl_spmd.handoff_step is not None, "one-peer handoff never fired"
+
+pd = jax.tree.map(
+    lambda a, b: float(jnp.abs(a - b).max()),
+    jax.device_get(state.params), jax.device_get(sim_state.params),
+)
+maxdiff = max(jax.tree.leaves(pd))
+print(f"MAXDIFF={maxdiff:.3e}")
+print(f"HANDOFF={ctl_spmd.handoff_step}")
+print(f"EXECUTABLES={len(used)}/{len(allowed)}")
+if maxdiff < 5e-5:
+    print("CONSENSUS_EQUIV_OK")
+else:
+    sys.exit(1)

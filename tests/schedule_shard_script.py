@@ -75,4 +75,42 @@ for prog, w in zip(programs, oracles):
 if failures:
     print(f"SHARD_FAILURES={','.join(failures)}")
     sys.exit(1)
+
+# --- consensus distance: shard realization == stacked realization ----------
+from repro.core.consensus import (
+    consensus_distance_shard, consensus_distance_stacked, consensus_sq_shard,
+)
+
+tree = {
+    "a": jnp.asarray(
+        np.random.default_rng(1).normal(size=(N, 4, 3)).astype(np.float32)
+    ),
+    "b": jnp.asarray(
+        np.random.default_rng(2).normal(size=(N, 5)).astype(np.float32)
+    ),
+}
+xi_stacked = float(consensus_distance_stacked(tree))
+f_xi = jax.jit(
+    compat.shard_map(
+        lambda v: (
+            consensus_distance_shard(v, "gossip")[None],
+            consensus_sq_shard(v, "gossip")[None],
+        ),
+        mesh=mesh,
+        in_specs=P("gossip"),
+        out_specs=(P("gossip"), P("gossip")),
+    )
+)
+xi_shard, sq_shard = f_xi(tree)
+xi_shard = np.asarray(xi_shard)  # (N,): the same scalar on every node
+from repro.core.consensus import consensus_sq_stacked
+
+sq_stacked = np.asarray(consensus_sq_stacked(tree))
+err_xi = float(np.abs(xi_shard - xi_stacked).max())
+err_sq = float(np.abs(np.asarray(sq_shard) - sq_stacked).max())
+print(f"consensus shard==stacked xi_err={err_xi:.2e} sq_err={err_sq:.2e}")
+if err_xi > 1e-5 or err_sq > 1e-4:
+    print("CONSENSUS_SHARD_FAIL")
+    sys.exit(1)
+
 print("SHARD_INTERPRETER_OK")

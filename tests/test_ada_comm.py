@@ -1,0 +1,73 @@
+"""Step-granular communication accounting (benchmarks/ada.py).
+
+Regression for the bug where ``_total_comm`` billed time-varying phases
+the step-0 graph every step: accounting must be per-step program bytes.
+The pinned analytic fact: the one-peer exponential family moves exactly
+ONE permute of the full parameter tree per node per step, so its total is
+``steps · P`` — the cost floor Ada's advantage decays onto.
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.ada import STEPS_PER_EPOCH, _total_comm, _tree_bytes
+from repro.core.dsgd import make_topology
+
+
+PARAMS = {"w": jnp.zeros((1000,), jnp.float32), "b": jnp.zeros((24,), jnp.float32)}
+P = _tree_bytes(PARAMS)  # 4096 bytes
+
+
+def test_one_peer_comm_is_one_permute_per_step():
+    topo = make_topology("d_one_peer_exp", 16)
+    steps = 13  # deliberately not a multiple of the period
+    assert _total_comm(topo, steps, PARAMS) == steps * P
+
+
+def test_ada_one_peer_floor_billed_per_step():
+    """Open-loop Ada with a one-peer floor: lattice epochs bill the lattice
+    program, one-peer epochs bill exactly P per step."""
+    # k0=2, gamma=1: epoch 0 is the k=2 ring, epoch >= 1 is one-peer
+    topo = make_topology("d_ada", 16, k0=2, gamma_k=1.0, k_floor="one_peer")
+    steps = 3 * STEPS_PER_EPOCH
+    ring_step = 2 * P  # k=2 ring: two permute offsets
+    want = STEPS_PER_EPOCH * ring_step + 2 * STEPS_PER_EPOCH * P
+    assert _total_comm(topo, steps, PARAMS) == want
+
+
+def test_matching_comm_counts_participants_only():
+    """An odd-n matching idles one node; billing is per participating link,
+    not a dense graph."""
+    topo = make_topology("d_random_matching", 9, seed=0, pool=4)
+    steps = 8
+    # every random_matching on 9 nodes has 4 edges = 8 directed links
+    want = steps * int(P * 8 / 9)
+    assert _total_comm(topo, steps, PARAMS) == want
+
+
+def test_closed_loop_comm_replays_recorded_trace():
+    """Closed-loop accounting bills the rung actually in force at each
+    step, replayed from the controller's transition log."""
+    topo = make_topology("d_ada", 16, k0=4, k_floor="one_peer",
+                         consensus_target=0.5)  # ladder (4, 2, one_peer)
+    ctl = topo.controller
+    # synthesize a run: k=4 until step 4, k=2 from 4, one-peer from 8
+    ctl.observe(10.0, 0)
+    ctl.observe(1.0, 4)
+    ctl.observe(10.0, 6)
+    ctl.observe(1.0, 8)
+    assert ctl.handoff_step == 8
+    total = _total_comm(topo, 12, PARAMS)
+    # k=4 lattice: ±1,±2 offsets = 4 permutes; k=2 ring: 2 permutes; the
+    # one-peer phase is exactly one permute = P per step.  Every probe
+    # (probe_every=1 here) additionally bills the x̄ all-reduce.
+    probe = int(2 * P * 15 / 16)
+    want = 4 * (4 * P) + 4 * (2 * P) + 4 * P + 12 * probe
+    assert total == want
+    # accounting must not disturb the live rung
+    assert ctl.current == "one_peer"
+
+
+def test_centralized_billed_as_allreduce():
+    topo = make_topology("c_complete", 8)
+    per_step = int(2 * P * 7 / 8)  # ring all-reduce bytes per node
+    assert _total_comm(topo, 5, PARAMS) == 5 * per_step

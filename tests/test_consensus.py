@@ -1,0 +1,252 @@
+"""Consensus distance + the closed-loop Ada controller (core/consensus.py).
+
+Covers the on-device Ξ realizations against numpy oracles, the
+ConsensusController contract (reference arming, trigger-iff-crossed,
+monotone walk, bounded ladder), and the end-to-end closed-loop simulator
+run: the one-peer handoff comes from the measured signal, the stacked
+engine matches the dense oracle to float32 round-off, and the executable
+cache stays inside the pre-enumerated ``distinct_programs`` set.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import consensus
+from repro.core.ada import AdaSchedule
+from repro.core.consensus import ConsensusController
+from repro.core.dsgd import make_topology
+from repro.core.simulator import DecentralizedSimulator
+from repro.optim.sgd import sgd
+
+
+# ---------------------------------------------------------------------------
+# On-device consensus distance
+# ---------------------------------------------------------------------------
+
+def _stacked_tree(n=6, seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "a": jnp.asarray(rng.normal(size=(n, 3, 4)).astype(np.float32)),
+        "b": jnp.asarray(rng.normal(size=(n, 7)).astype(np.float32)),
+    }
+
+
+def _flat(tree, n):
+    return np.concatenate(
+        [np.asarray(x).reshape(n, -1) for x in jax.tree.leaves(tree)], axis=1
+    )
+
+
+def test_consensus_distance_matches_numpy_oracle():
+    n = 6
+    tree = _stacked_tree(n)
+    flat = _flat(tree, n)
+    want_sq = np.sum((flat - flat.mean(axis=0)) ** 2, axis=1)
+    got_sq = np.asarray(consensus.consensus_sq_stacked(tree))
+    assert got_sq.shape == (n,)
+    assert np.allclose(got_sq, want_sq, rtol=1e-5)
+    want = np.sqrt(want_sq.mean())
+    got = float(consensus.consensus_distance_stacked(tree))
+    assert abs(got - want) < 1e-5 * max(want, 1.0)
+
+
+def test_consensus_distance_zero_for_identical_replicas():
+    x = jnp.ones((4, 5, 2))
+    tree = {"w": x, "b": 3.0 * jnp.ones((4, 9))}
+    assert float(consensus.consensus_distance_stacked(tree)) == 0.0
+
+
+def test_consensus_distance_jits():
+    tree = _stacked_tree(5, seed=3)
+    eager = float(consensus.consensus_distance_stacked(tree))
+    jitted = float(jax.jit(consensus.consensus_distance_stacked)(tree))
+    assert abs(eager - jitted) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Controller contract
+# ---------------------------------------------------------------------------
+
+def _controller(n=16, k0=4, target=0.5, k_floor="one_peer", **kw):
+    sched = AdaSchedule(n_nodes=n, k0=k0, gamma_k=1.0, k_floor=k_floor)
+    return ConsensusController(schedule=sched, target=target, **kw)
+
+
+def test_ladder_covers_k0_down_to_floor_plus_one_peer():
+    # RingLattice uses k//2 hops per side, so odd k == k-1: graph-identical
+    # rungs collapse (every transition must actually sparsify)
+    ctl = _controller(n=16, k0=5)
+    assert ctl.ladder == (4, 2, "one_peer")
+    ctl_int = _controller(n=16, k0=5, k_floor=3)
+    assert ctl_int.ladder == (4, 3)
+    # k0 above n-1 clips; k0 below the floor still yields the floor rung
+    assert _controller(n=6, k0=50).ladder == (4, 2, "one_peer")
+    assert _controller(n=16, k0=2).ladder == (2, "one_peer")
+
+
+def test_trigger_fires_iff_ratio_crossed():
+    ctl = _controller(target=0.5)
+    assert not ctl.observe(0.0, 0)        # zero: no reference yet
+    assert ctl.xi0 is None
+    assert not ctl.observe(10.0, 1)       # arms the phase reference
+    assert ctl.xi0 == 10.0
+    assert not ctl.observe(12.0, 2)       # peak tracking raises it
+    assert ctl.xi0 == 12.0
+    assert not ctl.observe(6.1, 3)        # 6.1 > 0.5 * 12: no trigger
+    assert ctl.rung == 0
+    assert ctl.observe(6.0, 4)            # 6.0 <= 0.5 * 12: fires once
+    assert ctl.rung == 1 and ctl.current == 2
+    assert ctl.xi0 is None                # reference re-armed for new phase
+    assert ctl.transitions == [(4, 1)]
+
+
+def test_controller_walk_is_monotone_and_bounded():
+    ctl = _controller(n=16, k0=4, target=0.5)
+    rng = np.random.default_rng(7)
+    last = ctl.rung
+    for t in range(200):
+        before = ctl.rung
+        fired = ctl.observe(float(np.abs(rng.normal()) * 10), t)
+        assert ctl.rung - before in (0, 1)          # at most one rung/probe
+        assert fired == (ctl.rung == before + 1)
+        assert ctl.rung >= last                      # never re-densifies
+        last = ctl.rung
+    assert 0 <= ctl.rung < len(ctl.ladder)
+
+
+def test_handoff_fires_only_from_last_lattice_rung():
+    ctl = _controller(n=16, k0=4, target=0.5)  # ladder (4, 2, one_peer)
+    ctl.observe(10.0, 0)
+    assert ctl.handoff_step is None
+    ctl.observe(1.0, 1)                        # -> k=2
+    assert ctl.current == 2 and ctl.handoff_step is None
+    ctl.observe(8.0, 2)                        # new phase reference
+    ctl.observe(1.0, 3)                        # -> one_peer
+    assert ctl.one_peer_active and ctl.handoff_step == 3
+    ctl.observe(8.0, 4)
+    ctl.observe(0.1, 5)                        # terminal rung: no-op
+    assert ctl.rung == len(ctl.ladder) - 1
+
+
+def test_pinned_enumeration_and_rung_replay():
+    ctl = _controller(n=16, k0=4, target=0.5)  # ladder (4, 2, one_peer)
+    with ctl.pinned(2):
+        assert ctl.one_peer_active
+        assert ctl.period_steps() == 4  # one-peer period at n=16
+    assert ctl.rung == 0 and ctl.period_steps() == 1
+    with pytest.raises(ValueError):
+        with ctl.pinned(99):
+            pass
+    # replay: transitions recorded at steps 3 and 7
+    ctl.observe(10.0, 1)
+    ctl.observe(1.0, 3)
+    ctl.observe(10.0, 5)
+    ctl.observe(1.0, 7)
+    assert [ctl.rung_at(t) for t in (0, 2, 3, 6, 7, 100)] == [0, 0, 1, 1, 2, 2]
+
+
+def test_reset_rearms():
+    ctl = _controller()
+    ctl.observe(10.0, 0)
+    ctl.observe(1.0, 1)
+    ctl.reset()
+    assert ctl.xi0 is None and ctl.rung == 0
+    assert ctl.transitions == [] and ctl.trace == []
+
+
+def test_make_topology_validation():
+    with pytest.raises(ValueError, match="d_ada"):
+        make_topology("d_ring", 8, consensus_target=0.5)
+    with pytest.raises(ValueError, match="target"):
+        make_topology("d_ada", 8, consensus_target=1.5)
+    with pytest.raises(ValueError, match="gamma_k"):
+        make_topology("d_ada", 8, gamma_k=1.0, consensus_target=0.5)
+    topo = make_topology("d_ada", 16, k0=4, k_floor="one_peer",
+                         consensus_target=0.5, consensus_probe_every=2)
+    assert topo.closed_loop and topo.controller.probe_every == 2
+    assert topo.time_varying
+    assert "closed-loop" in topo.describe()
+    # transitions fire at measured steps even with an integer floor
+    assert make_topology("d_ada", 16, k0=6, consensus_target=0.5).time_varying
+
+
+def test_distinct_programs_enumerates_full_ladder():
+    topo = make_topology("d_ada", 16, k0=4, k_floor="one_peer",
+                         consensus_target=0.5)
+    progs = topo.distinct_programs()
+    names = [p.name for _, p in progs]
+    # 2 distinct lattices (k=4, k=2 — k=3 is graph-identical to k=2 and
+    # deduped out of the ladder) + the 4-step one-peer cycle
+    assert len(progs) == 2 + 4
+    assert sum(n.startswith("one_peer_exp") for n in names) == 4
+    # enumeration must not disturb the live rung
+    assert topo.controller.rung == 0
+
+
+# ---------------------------------------------------------------------------
+# Closed-loop simulator: the acceptance run (n=16, quick tier)
+# ---------------------------------------------------------------------------
+
+N = 16
+TARGET = 0.6
+STEPS = 48
+
+
+def _loss_fn(params, batch):
+    return jnp.mean((params["w"] - batch["t"]) ** 2)
+
+
+def _run_closed_loop(mixing):
+    topo = make_topology("d_ada", N, k0=4, k_floor="one_peer",
+                         consensus_target=TARGET)  # ladder (4, 2, one_peer)
+    sim = DecentralizedSimulator(_loss_fn, sgd(momentum=0.9), topo,
+                                 mixing=mixing)
+    state = sim.init({"w": jnp.zeros((8,))})
+    rng = np.random.default_rng(0)
+    for t in range(STEPS):
+        tgt = jnp.asarray(rng.normal(size=(N, 8)).astype(np.float32))
+        lr = 0.4 * (0.8 ** t)  # decaying noise -> consensus tightens
+        state, _, _ = sim.train_step(state, {"t": tgt}, lr, epoch=t // 5)
+    return topo.controller, sim, state
+
+
+def test_closed_loop_sim_handoff_oracle_and_bounded_cache():
+    ctl_s, sim_s, st_s = _run_closed_loop("stacked")
+    ctl_d, _, st_d = _run_closed_loop("dense")
+
+    # The handoff epoch comes from the measured signal: it fires at the
+    # step where the probed ratio crossed the target, with the recorded
+    # trace proving the crossing — not at any open-loop k<2 epoch constant.
+    assert ctl_s.handoff_step is not None
+    xi_at = {s: xi for s, xi, _ in ctl_s.trace}
+    assert 0.0 < xi_at[ctl_s.handoff_step]  # a real measurement drove it
+    open_loop = AdaSchedule(n_nodes=N, k0=4, gamma_k=1.0, k_floor="one_peer")
+    open_handoffs = [e for e in range(STEPS) if open_loop.one_peer_at(e)]
+    assert ctl_s.handoff_step != (open_handoffs[0] if open_handoffs else None)
+
+    # Both interpreters pick the same graph sequence and agree to float32
+    # round-off (the dense interpreter is the paper-faithful oracle).
+    assert ctl_s.transitions == ctl_d.transitions
+    diff = float(jnp.abs(st_s.params["w"] - st_d.params["w"]).max())
+    assert diff < 1e-5
+
+    # Bounded-executable-set invariant: every executable the run compiled
+    # is keyed by a pre-enumerated program.
+    topo = make_topology("d_ada", N, k0=4, k_floor="one_peer",
+                         consensus_target=TARGET)
+    allowed = {p.cache_key for _, p in topo.distinct_programs()}
+    used = set(sim_s._step_cache) - {"__centralized__", "__local__"}
+    assert used and used <= allowed
+
+
+def test_closed_loop_probe_cadence():
+    topo = make_topology("d_ada", N, k0=3, k_floor="one_peer",
+                         consensus_target=TARGET, consensus_probe_every=4)
+    sim = DecentralizedSimulator(_loss_fn, sgd(momentum=0.9), topo)
+    state = sim.init({"w": jnp.zeros((4,))})
+    rng = np.random.default_rng(1)
+    for t in range(9):
+        tgt = jnp.asarray(rng.normal(size=(N, 4)).astype(np.float32))
+        state, _, _ = sim.train_step(state, {"t": tgt}, 0.1, epoch=0)
+    assert [s for s, _, _ in topo.controller.trace] == [0, 4, 8]

@@ -66,6 +66,27 @@ def test_rank_analysis_orders_implementations():
     assert np.all(ranks["d_ring"] == 3)
 
 
+def test_rank_analysis_ties_get_average_ranks():
+    """Equal-dispersion impls must TIE (scipy-style average ranks), not be
+    assigned arbitrary distinct ranks by stable argsort order."""
+    iters, leaves = 4, 3
+    equal = np.full((iters, leaves), 0.5)
+    ranks = dbench.rank_analysis(
+        {"d_ring": equal, "d_torus": equal.copy(), "c_complete": equal.copy()}
+    )
+    for name, r in ranks.items():
+        assert np.allclose(r, 2.0), (name, r)  # (1+2+3)/3 on every iteration
+
+    # partial tie: two impls equal, one strictly lower
+    low = np.full((iters, leaves), 0.1)
+    ranks = dbench.rank_analysis(
+        {"d_ring": equal, "d_torus": equal.copy(), "c_complete": low}
+    )
+    assert np.allclose(ranks["c_complete"], 1.0)
+    assert np.allclose(ranks["d_ring"], 2.5)   # mean of positions 2 and 3
+    assert np.allclose(ranks["d_torus"], 2.5)
+
+
 def test_recorder_roundtrip():
     rec = dbench.DBenchRecorder(impl="d_ring", n_nodes=4)
     for t in range(3):

@@ -38,6 +38,19 @@ def test_star_lowers_to_permutes_only():
 
 
 @pytest.mark.slow
+def test_closed_loop_ada_matches_simulator():
+    """Consensus-distance-triggered Ada (8 steps): both engines feed the
+    controller the same measured signal, pick the SAME graph sequence
+    (identical transition logs), hand off to one-peer at a measured step,
+    agree to float32 round-off, and compile nothing beyond the ladder.
+    ~50s on an idle 2-CPU box but up to ~10x under pytest contention —
+    slow tier, like the other trainer-level equivalence runs."""
+    out = _run("consensus_equivalence_script.py", timeout=900)
+    assert "CONSENSUS_EQUIV_OK" in out
+    assert _extract(out, "MAXDIFF") < 5e-5
+
+
+@pytest.mark.slow
 @pytest.mark.parametrize(
     "topo",
     [
