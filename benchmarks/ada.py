@@ -65,10 +65,17 @@ def _total_comm(
     computing x̄ is one all-reduce of the parameter tree per probe
     (2·P·(n-1)/n per node, like any ring all-reduce), the honest price of
     the control signal.
+
+    Fault runs (``topo.fault_model``) replay the seeded realization stream
+    and bill each step's *surviving* edges only: a crashed node's program
+    is the degraded one (its permutes are gone from the wire), and a
+    transiently dropped edge moves no payload — at high fault rates a
+    naive full-program mask would make dead-edge bytes the dominant term.
     """
     pbytes = _tree_bytes(params0)
     n = topo.n_nodes
     ctl = topo.controller
+    fm = topo.fault_model
     total = 0
     for t in range(steps):
         epoch = t // steps_per_epoch
@@ -81,7 +88,15 @@ def _total_comm(
             prog = topo.program_at(step=t, epoch=epoch)
         if prog is None:  # centralized: gradient all-reduce == complete graph
             prog = compile_graph(Complete(n))
-        total += program_comm_bytes(prog, pbytes)
+        if fm is not None:
+            fr = fm.at(t)
+            if not fr.program_alive.all():
+                prog = prog.degrade(fr.program_alive)
+            total += program_comm_bytes(
+                prog, pbytes, alive=fr.alive, link_up=fr.link_up
+            )
+        else:
+            total += program_comm_bytes(prog, pbytes)
     return total
 
 

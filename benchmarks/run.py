@@ -7,6 +7,7 @@ land in benchmarks/results/ and feed EXPERIMENTS.md.
   variance         Fig 4–5   gini dispersion + variance-rank integration
   ada              Fig 7     Ada vs static graphs (+ comm volume)
   comm_cost        Table 1   per-graph communication model
+  faults           —         resilience: fault rate × topology class
   lr_scaling       §3.2      linear vs sqrt LR scaling rescue
   step_time        —         mixing-implementation microbench
 
@@ -34,7 +35,10 @@ def main() -> None:
                          "the whole run fits the 2-CPU box")
     args = ap.parse_args()
 
-    from benchmarks import accuracy_graphs, ada, comm_cost, lr_scaling, step_time, variance
+    from benchmarks import (
+        accuracy_graphs, ada, comm_cost, faults, lr_scaling, step_time,
+        variance,
+    )
 
     small = args.fast or args.quick
     suites = {
@@ -46,6 +50,10 @@ def main() -> None:
         ),
         "variance": lambda: variance.run(steps=15 if args.quick else (30 if args.fast else 50)),
         "ada": lambda: ada.run(
+            steps=20 if args.quick else (40 if args.fast else 120),
+            quick=args.quick,
+        ),
+        "faults": lambda: faults.run(
             steps=20 if args.quick else (40 if args.fast else 120),
             quick=args.quick,
         ),

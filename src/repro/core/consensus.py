@@ -60,6 +60,8 @@ __all__ = [
     "consensus_sq_stacked",
     "consensus_distance_stacked",
     "consensus_distance_jit",
+    "consensus_distance_masked",
+    "consensus_distance_masked_jit",
     "consensus_sq_shard",
     "consensus_distance_shard",
     "ConsensusController",
@@ -98,6 +100,34 @@ def consensus_distance_stacked(stacked: PyTree) -> jax.Array:
 # entry point (jax caches traces per shape), so neither engine carries its
 # own lazy-init state.
 consensus_distance_jit = jax.jit(consensus_distance_stacked)
+
+
+def consensus_distance_masked(stacked: PyTree, alive) -> jax.Array:
+    """Ξ over the *alive* nodes only: sqrt(1/|A| Σ_{i∈A} ‖x_i - x̄_A‖²).
+
+    Under faults a dead node's frozen replica is not part of the training
+    population; including it would hold Ξ artificially high and freeze the
+    controller's ladder.  ``alive`` is a runtime (n,) mask, so one
+    executable serves every realization (shape-keyed jit like the unmasked
+    probe).  With every node alive this equals ``consensus_distance_stacked``.
+    """
+    leaves = jax.tree.leaves(stacked)
+    if not leaves:
+        raise ValueError("consensus distance of an empty pytree")
+    af = jnp.asarray(alive, jnp.float32)
+    count = jnp.maximum(jnp.sum(af), 1.0)
+    total = None
+    for x in leaves:
+        xf = x.astype(jnp.float32)
+        acol = af.reshape((af.shape[0],) + (1,) * (xf.ndim - 1))
+        mean = jnp.sum(xf * acol, axis=0, keepdims=True) / count
+        d = (xf - mean) * acol
+        sq = jnp.sum(jnp.square(d), axis=tuple(range(1, d.ndim)))
+        total = sq if total is None else total + sq
+    return jnp.sqrt(jnp.sum(total) / count)
+
+
+consensus_distance_masked_jit = jax.jit(consensus_distance_masked)
 
 
 def consensus_sq_shard(local: PyTree, axis_names) -> jax.Array:
@@ -174,6 +204,7 @@ class ConsensusController:
     rung: int = 0
     transitions: list = dataclasses.field(default_factory=list)  # [(step, rung)]
     trace: list = dataclasses.field(default_factory=list)  # [(step, xi, rung)]
+    events: list = dataclasses.field(default_factory=list)  # [(step, reason)]
 
     def __post_init__(self):
         if not (0.0 < self.target < 1.0):
@@ -261,12 +292,28 @@ class ConsensusController:
         self.trace.append((int(step), xi, self.rung))
         return fired
 
+    def rearm(self, step: int, reason: str = "fault") -> None:
+        """Re-arm the per-phase peak Ξ_0 on a membership event.
+
+        A crash or rejoin spikes the measured consensus distance (a dead
+        node's replica freezes; a rejoining node re-enters off-average).
+        Without re-arming, the stale pre-fault Ξ_0 makes the post-fault
+        ratio Ξ_t/Ξ_0 look tighter than it is and ratchets the ladder down
+        exactly when the run needs MORE connectivity.  Re-arming keeps the
+        rung and restarts the phase reference: the next probes re-seed and
+        peak-track Ξ_0 on the degraded membership, so the trigger compares
+        like with like.  Recorded in ``events`` for replay/diagnostics.
+        """
+        self.xi0 = None
+        self.events.append((int(step), str(reason)))
+
     def reset(self) -> None:
         """Re-arm for a fresh run (clears Ξ_0, rung, and the trace)."""
         self.xi0 = None
         self.rung = 0
         self.transitions.clear()
         self.trace.clear()
+        self.events.clear()
 
     # -- schedule interface (what Topology delegates to) ----------------------
     def graph_at(self, epoch: int = 0, step: int = 0) -> CommGraph:

@@ -42,11 +42,14 @@ from typing import Any, Optional
 
 from repro.core.ada import AdaSchedule, default_k0
 from repro.core.consensus import ConsensusController
+from repro.core.faults import FaultModel
 from repro.core.graphs import (
     CommGraph, make_graph, one_peer_exponential, one_peer_period,
     random_matching,
 )
-from repro.core.schedule import GossipProgram, compile_graph
+from repro.core.schedule import (
+    GossipProgram, compile_graph, maybe_hub_balanced,
+)
 
 __all__ = [
     "Topology",
@@ -135,6 +138,7 @@ class Topology:
     ada: Optional[AdaSchedule] = None
     sequence: Optional[GraphSequence] = None
     controller: Optional[ConsensusController] = None
+    fault_model: Optional[FaultModel] = None
     mix_order: str = "post"  # "post" | "pre"
 
     def graph_at(self, epoch: int = 0, step: int = 0) -> Optional[CommGraph]:
@@ -165,12 +169,19 @@ class Topology:
         return None if g is None else compile_graph(g)
 
     def fused_program_at(
-        self, *, step: int = 0, epoch: int = 0, rounds: int = 1
+        self, *, step: int = 0, epoch: int = 0, rounds: int = 1,
+        hub_balance: bool = False,
     ) -> Optional[GossipProgram]:
         """The program for gossip round ``step`` when every round applies
         ``rounds`` consecutive schedule steps fused into ONE executable
         (``GossipProgram.fuse``) — H dispatches collapse to one, and a
         time-varying family advances its phase by ``rounds`` per round.
+
+        ``hub_balance``: when the fused rounds are one *static* multi-round
+        permute program repeated (the star, lattices), reschedule its
+        matchings round-robin across the H steps (``hub_balanced_rounds``)
+        so a hot vertex no longer sends in every round of every step —
+        time-varying families keep their own rotation.
         """
         if rounds <= 1:
             return self.program_at(step=step, epoch=epoch)
@@ -180,6 +191,10 @@ class Topology:
         ]
         if any(p is None for p in progs):
             return None
+        if hub_balance:
+            balanced = maybe_hub_balanced(progs, rounds)
+            if balanced is not None:
+                return balanced
         return GossipProgram.fuse(progs)
 
     def period_at(self, epoch: int = 0) -> int:
@@ -204,6 +219,13 @@ class Topology:
         measured signal decides when each rung activates, but the set it
         can select from is the controller's ladder, pinned rung by rung
         here — closed-loop adaptation compiles nothing beyond this set.
+
+        With a permanent-crash ``fault_model`` the set additionally folds
+        in each base program's degraded variant per membership mask the
+        model can realize (``FaultModel.program_masks`` — the single-node-
+        out set): a crash then *selects* among pre-enumerated programs
+        exactly like a schedule transition, and zero mid-run recompiles
+        still holds under faults.
         """
         if self.centralized:
             return []
@@ -217,13 +239,21 @@ class Topology:
                         if prog is not None and prog.cache_key not in seen:
                             seen.add(prog.cache_key)
                             out.append(((r, s), prog))
-            return out
-        for e in range(max(int(n_epochs), 1)):
-            for s in range(self.period_at(e)):
-                prog = self.program_at(step=s, epoch=e)
-                if prog is not None and prog.cache_key not in seen:
-                    seen.add(prog.cache_key)
-                    out.append(((e, s), prog))
+        else:
+            for e in range(max(int(n_epochs), 1)):
+                for s in range(self.period_at(e)):
+                    prog = self.program_at(step=s, epoch=e)
+                    if prog is not None and prog.cache_key not in seen:
+                        seen.add(prog.cache_key)
+                        out.append(((e, s), prog))
+        if self.fault_model is not None:
+            from repro.core.faults import fold_degraded_programs
+
+            key_of = {p.cache_key: k for k, p in out}
+            for base_p, deg in fold_degraded_programs(
+                [p for _, p in out], self.fault_model
+            ):
+                out.append((key_of[base_p.cache_key], deg))
         return out
 
     @property
@@ -251,6 +281,14 @@ class Topology:
         return self.n_nodes - 1 if g is None else g.degree
 
     def describe(self) -> str:
+        suffix = (
+            f" [faults: {self.fault_model.describe()}]"
+            if self.fault_model is not None
+            else ""
+        )
+        return self._describe_base() + suffix
+
+    def _describe_base(self) -> str:
         if self.centralized:
             return f"{self.name}: centralized all-reduce over {self.n_nodes} nodes"
         if self.controller is not None:
@@ -288,6 +326,7 @@ def make_topology(
     adjacency: Any = None,
     consensus_target: float | None = None,
     consensus_probe_every: int = 1,
+    fault_model: FaultModel | None = None,
 ) -> Topology:
     """Build one of the benchmarked topologies.
 
@@ -305,6 +344,9 @@ def make_topology(
         Ξ_t/Ξ_0 crossing this target (arXiv:2102.04828) instead of the
         open-loop epoch law.  ``consensus_probe_every`` sets the probe
         cadence in training steps.
+      fault_model: seeded fault injection (``core/faults.make_fault_model``)
+        both engines consume identically; decentralized only — the
+        centralized all-reduce has no per-node degradation semantics.
     """
     if mix_order not in ("post", "pre"):
         raise ValueError(f"mix_order must be 'post'|'pre', got {mix_order!r}")
@@ -312,7 +354,16 @@ def make_topology(
         raise ValueError(
             f"consensus_target is a d_ada (closed-loop Ada) option; got {name!r}"
         )
-    base = dict(name=name, n_nodes=n_nodes, mix_order=mix_order)
+    if fault_model is not None:
+        if name == "c_complete":
+            raise ValueError("fault injection is decentralized-only")
+        if fault_model.n != n_nodes:
+            raise ValueError(
+                f"fault model covers {fault_model.n} nodes but n_nodes={n_nodes}"
+            )
+    base = dict(
+        name=name, n_nodes=n_nodes, mix_order=mix_order, fault_model=fault_model
+    )
     if name == "c_complete":
         return Topology(centralized=True, **base)
     if name == "d_complete":

@@ -1,0 +1,409 @@
+"""Fault models + elastic membership for decentralized training (resilience).
+
+The paper motivates decentralized learning with production stability, yet
+repro runs only ever see pristine graphs.  This module injects the fault
+classes production training must survive (arXiv:2410.11998 "from promise to
+practice") as *seeded, step-deterministic* models both engines consume
+identically: the realization at step t is a pure function of
+``(seed, t)`` — the simulator and the SPMD trainer draw the same masks
+without any cross-engine communication, so fault runs stay reproducible
+and engine-equivalence tests stay exact.
+
+Fault classes (``make_fault_model``):
+
+  * ``crash``     — one permanent node crash: a seeded victim dies at a
+    seeded step and stays dead (optionally rejoining after ``down_steps``).
+    The engines switch to the pre-enumerated degraded program
+    (``GossipProgram.degrade``) — the *single-node-out program set* folded
+    into ``Topology.distinct_programs`` — so a crash changes which cached
+    executable runs, never compiles a new one mid-run.
+  * ``dropout``   — transient node dropout: per-step i.i.d. Bernoulli(rate)
+    per node.  A dropped node skips this round's gossip (its row degrades
+    to identity, its neighbors renormalize onto self) but still takes its
+    local update.  Realized through *runtime masks* — same executable for
+    every realization.
+  * ``link``      — per-edge Bernoulli(rate) link failure per step,
+    symmetric (both directions die together).  Runtime masks.
+  * ``straggler`` — per-step Bernoulli(rate) stragglers: the node skips its
+    local optimizer update (gradient discarded, momentum untouched) but
+    still participates in gossip — the "slow worker" regime.
+
+How the masks act (shared by both engines):
+
+  * ``update`` gates the local optimizer step per node (stragglers, dead).
+  * ``alive`` + ``link_up`` degrade the mixing matrix at runtime exactly as
+    ``schedule.degraded_matrix``: dropped edges renormalize onto the
+    receiver's self weight (in-kernel for the fused Pallas apply).
+  * ``rejoin`` lists nodes re-entering *this* step: elastic membership —
+    a recovered node adopts its alive neighbors' average (params and
+    optimizer state) before the step runs, then trains normally.
+
+``ConsensusController`` integration: a membership change spikes the
+measured consensus distance; the engines call ``controller.rearm`` so the
+per-phase peak Ξ_0 re-arms on the new membership instead of a stale ladder
+reference ratcheting the schedule down.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.schedule import degraded_matrix  # noqa: F401  (re-export)
+
+PyTree = Any
+
+__all__ = [
+    "FAULT_MODELS",
+    "FaultModel",
+    "FaultRealization",
+    "LinkFailure",
+    "NoFaults",
+    "PermanentCrash",
+    "Straggler",
+    "TransientDropout",
+    "adopt_neighbor_average",
+    "degraded_matrix",
+    "fold_degraded_programs",
+    "make_fault_model",
+    "realization_arrays",
+    "rejoin_neighbors",
+    "track_membership",
+]
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class FaultRealization:
+    """What the fault model says about ONE training step (numpy, host-side).
+
+    alive:         (n,) bool — node participates in this step's gossip.
+    update:        (n,) bool — node performs its local optimizer update.
+    program_alive: (n,) bool — the slowly-varying *membership* (all ones
+        except permanent crashes).  Engines select the degraded program by
+        this mask; the per-step ``alive``/``link_up`` ride as runtime
+        inputs so transient realizations never change the executable.
+    link_up:       optional (n, n) bool, symmetric — per-link liveness.
+    rejoin:        nodes re-entering at this step (adopt neighbor average).
+    """
+
+    alive: np.ndarray
+    update: np.ndarray
+    program_alive: np.ndarray
+    link_up: Optional[np.ndarray] = None
+    rejoin: tuple[int, ...] = ()
+
+    @property
+    def faulty(self) -> bool:
+        return (
+            not self.alive.all()
+            or not self.update.all()
+            or (self.link_up is not None and not self.link_up.all())
+        )
+
+    def membership_key(self) -> tuple:
+        """Hashable membership identity (drives controller re-arming)."""
+        return tuple(bool(a) for a in self.program_alive)
+
+
+def _rng(seed: int, step: int, salt: int = 0) -> np.random.Generator:
+    return np.random.default_rng(np.random.SeedSequence([seed, salt, step]))
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """Base: a seeded, step-deterministic fault process over n nodes."""
+
+    n: int
+    rate: float
+    seed: int = 0
+    name: str = "none"
+
+    def __post_init__(self):
+        if self.n < 1:
+            raise ValueError(f"fault model needs >=1 node, got n={self.n}")
+        if not (0.0 <= self.rate <= 1.0):
+            raise ValueError(f"fault rate must be in [0, 1], got {self.rate}")
+
+    def _ones(self) -> np.ndarray:
+        return np.ones(self.n, dtype=bool)
+
+    def at(self, step: int) -> FaultRealization:  # pragma: no cover - base
+        raise NotImplementedError
+
+    def program_masks(self) -> tuple[tuple[bool, ...], ...]:
+        """Every membership mask this model can realize beyond all-alive —
+        the alive-sets ``Topology.distinct_programs`` pre-enumerates
+        degraded programs for (empty for purely transient models)."""
+        return ()
+
+    @property
+    def has_link_faults(self) -> bool:
+        """Whether realizations may carry a per-edge ``link_up`` mask —
+        models that never do skip the (n, n) link operand entirely."""
+        return False
+
+    def describe(self) -> str:
+        return f"{self.name}(n={self.n}, rate={self.rate}, seed={self.seed})"
+
+
+@dataclasses.dataclass(frozen=True)
+class NoFaults(FaultModel):
+    name: str = "none"
+
+    def at(self, step: int) -> FaultRealization:
+        ones = self._ones()
+        return FaultRealization(alive=ones, update=ones, program_alive=ones)
+
+
+@dataclasses.dataclass(frozen=True)
+class PermanentCrash(FaultModel):
+    """One seeded victim crashes at a seeded step (single-node-out).
+
+    The victim and crash step derive from the seed: the crash step is a
+    geometric draw with parameter ``rate`` (expected onset ~1/rate steps).
+    ``down_steps`` (elastic membership) brings the victim back after that
+    many dead steps — it rejoins by adopting its neighbors' average.
+    Exactly one node is ever out at a time, so the degraded-program set the
+    engines must cache is bounded by one extra program per base program.
+    """
+
+    name: str = "crash"
+    down_steps: Optional[int] = None
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.down_steps is not None and int(self.down_steps) < 1:
+            # 0 would fire a rejoin for a node that never went down
+            # (neighbor-average overwrites healthy state); negative values
+            # would silently empty the crash window
+            raise ValueError(
+                f"down_steps must be >= 1, got {self.down_steps}"
+            )
+        r = _rng(self.seed, 0, salt=101)
+        victim = int(r.integers(self.n))
+        # first success of a Bernoulli(rate) sequence; rate 0 => never
+        crash_step = int(r.geometric(self.rate)) if self.rate > 0 else None
+        object.__setattr__(self, "_victim", victim)
+        object.__setattr__(self, "_crash_step", crash_step)
+
+    @property
+    def victim(self) -> int:
+        return self._victim
+
+    @property
+    def crash_step(self) -> Optional[int]:
+        return self._crash_step
+
+    @property
+    def rejoin_step(self) -> Optional[int]:
+        if self._crash_step is None or self.down_steps is None:
+            return None
+        return self._crash_step + int(self.down_steps)
+
+    def at(self, step: int) -> FaultRealization:
+        ones = self._ones()
+        c, r = self._crash_step, self.rejoin_step
+        down = c is not None and c <= step and (r is None or step < r)
+        if not down:
+            return FaultRealization(
+                alive=ones, update=ones, program_alive=ones,
+                rejoin=(self._victim,) if (r is not None and step == r) else (),
+            )
+        alive = ones.copy()
+        alive[self._victim] = False
+        return FaultRealization(
+            alive=alive, update=alive.copy(), program_alive=alive.copy()
+        )
+
+    def program_masks(self):
+        if self._crash_step is None:
+            return ()
+        mask = [True] * self.n
+        mask[self._victim] = False
+        return (tuple(mask),)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransientDropout(FaultModel):
+    """Per-step i.i.d. node dropout: skips gossip, keeps the local update."""
+
+    name: str = "dropout"
+
+    def at(self, step: int) -> FaultRealization:
+        ones = self._ones()
+        drop = _rng(self.seed, step, salt=1).random(self.n) < self.rate
+        if drop.all():  # keep at least one node in the round
+            drop[int(_rng(self.seed, step, salt=2).integers(self.n))] = False
+        return FaultRealization(alive=~drop, update=ones, program_alive=ones)
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkFailure(FaultModel):
+    """Per-step i.i.d. symmetric link failures (both directions die)."""
+
+    name: str = "link"
+
+    @property
+    def has_link_faults(self) -> bool:
+        return True
+
+    def at(self, step: int) -> FaultRealization:
+        ones = self._ones()
+        u = _rng(self.seed, step, salt=3).random((self.n, self.n))
+        up = np.triu(u >= self.rate, k=1)
+        link_up = up | up.T
+        np.fill_diagonal(link_up, True)
+        return FaultRealization(
+            alive=ones, update=ones.copy(), program_alive=ones.copy(),
+            link_up=link_up,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class Straggler(FaultModel):
+    """Per-step stragglers: skip the local update but still mix."""
+
+    name: str = "straggler"
+
+    def at(self, step: int) -> FaultRealization:
+        ones = self._ones()
+        slow = _rng(self.seed, step, salt=4).random(self.n) < self.rate
+        return FaultRealization(
+            alive=ones, update=~slow, program_alive=ones.copy()
+        )
+
+
+FAULT_MODELS = ("none", "crash", "dropout", "link", "straggler")
+
+
+def make_fault_model(
+    kind: str,
+    n: int,
+    *,
+    rate: float = 0.1,
+    seed: int = 0,
+    down_steps: Optional[int] = None,
+) -> Optional[FaultModel]:
+    """Factory: ``make_fault_model("dropout", 16, rate=0.05, seed=3)``.
+
+    ``kind="none"`` (or rate 0 for transient models) returns ``None`` so
+    engines keep their exact fault-free hot path.
+    """
+    if kind in (None, "none"):
+        return None
+    if kind == "crash":
+        m = PermanentCrash(n=n, rate=rate, seed=seed, down_steps=down_steps)
+        # rate 0 => crash_step None: the model can never realize a fault;
+        # keep the documented contract that engines stay on the exact
+        # fault-free hot path instead of paying the mask plumbing for nothing
+        return m if m.crash_step is not None else None
+    if down_steps is not None:
+        raise ValueError("down_steps is a crash (permanent-fault) option")
+    if rate == 0.0:
+        return None
+    if kind == "dropout":
+        return TransientDropout(n=n, rate=rate, seed=seed)
+    if kind == "link":
+        return LinkFailure(n=n, rate=rate, seed=seed)
+    if kind == "straggler":
+        return Straggler(n=n, rate=rate, seed=seed)
+    raise ValueError(f"unknown fault model {kind!r}; one of {FAULT_MODELS}")
+
+
+def fold_degraded_programs(programs, fault_model: FaultModel):
+    """(base, degraded) pairs for every membership mask the model can
+    realize over the given base programs, deduped against the bases and
+    each other by cache key.
+
+    The single enumeration used by both ``Topology.distinct_programs`` and
+    ``SPMDTrainer.precompile_programs`` — crash semantics (e.g. a future
+    multi-node mask set) must change in exactly one place or the trainer's
+    precompiled set drifts from the Topology's asserted cache bound.
+    """
+    programs = list(programs)
+    seen = {p.cache_key for p in programs}
+    out = []
+    for mask in fault_model.program_masks():
+        for p in programs:
+            d = p.degrade(mask)
+            if d.cache_key not in seen:
+                seen.add(d.cache_key)
+                out.append((p, d))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Elastic rejoin
+# ---------------------------------------------------------------------------
+
+def rejoin_neighbors(topology, fr: FaultRealization, node: int, *,
+                     step: int, epoch: int, mix_every: int = 1) -> list[int]:
+    """The alive peers a recovering node averages over: its neighborhood in
+    the graph in force at the rejoin step (every alive node for the
+    centralized/no-graph case).  Shared by both engines — the rejoin
+    semantics must stay in lockstep or the engine-equivalence guarantee
+    breaks."""
+    graph = topology.graph_at(epoch, step // max(int(mix_every), 1))
+    if graph is None:
+        return [i for i in range(len(fr.alive)) if fr.alive[i] and i != node]
+    return [i for i in graph.neighbors(node) if fr.alive[i] and i != node]
+
+
+def track_membership(last, fr: FaultRealization, controller, step: int):
+    """Fold one step's realization into the engine's membership tracking.
+
+    Returns the new membership key; on a change after the first step it
+    re-arms the consensus controller's phase reference (a crash/rejoin
+    spikes Ξ — comparing it against the pre-fault peak would ratchet the
+    ladder on a stale reference).  Shared by both engines.
+    """
+    membership = fr.membership_key()
+    if membership != last and last is not None and controller is not None:
+        controller.rearm(step)
+    return membership
+
+
+def adopt_neighbor_average(stacked: PyTree, node: int, neighbors) -> PyTree:
+    """Elastic re-entry: ``node`` adopts the average of ``neighbors``.
+
+    ``stacked`` carries a leading (n, ...) node axis (both engines' global
+    state).  The recovered node's stale parameters (and optimizer state)
+    are replaced by the mean of its alive neighbors' values — the gossip
+    average it would have converged to had it kept mixing; with no alive
+    neighbor it keeps its own values.  Rejoins are rare membership events,
+    executed eagerly: they never enter the step-executable cache.
+    """
+    nbrs = [int(i) for i in neighbors]
+    if not nbrs:
+        return stacked
+    idx = jnp.asarray(nbrs)
+
+    def _adopt(x):
+        mean = jnp.mean(
+            jnp.take(x, idx, axis=0).astype(jnp.float32), axis=0
+        ).astype(x.dtype)
+        return x.at[node].set(mean)
+
+    return jax.tree.map(_adopt, stacked)
+
+
+def realization_arrays(fr: FaultRealization) -> dict:
+    """The runtime-mask pytree the jitted fault-aware step consumes.
+
+    Fixed structure per fault model — every realization maps to the same
+    executable signature.  Models that never produce link faults carry
+    ``"link": None`` (an empty pytree subtree): the O(n²) all-ones matrix
+    would otherwise be rebuilt, transferred, and multiplied through on
+    every step of the hot path for nothing.
+    """
+    return {
+        "update": jnp.asarray(fr.update, jnp.float32),
+        "alive": jnp.asarray(fr.alive, jnp.float32),
+        "link": (
+            None if fr.link_up is None
+            else jnp.asarray(fr.link_up.astype(np.float32))
+        ),
+    }

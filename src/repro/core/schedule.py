@@ -80,9 +80,12 @@ __all__ = [
     "GossipProgram",
     "FusedProgram",
     "compile_graph",
+    "degraded_matrix",
     "dense_program",
     "edge_coloring",
+    "hub_balanced_rounds",
     "identity_program",
+    "maybe_hub_balanced",
     "permutation_for_offset",
     "program_comm_bytes",
     "program_max_node_bytes",
@@ -139,6 +142,34 @@ def _weight_column(weight, n: int) -> np.ndarray:
     if isinstance(weight, tuple):
         return np.asarray(weight, dtype=np.float64)
     return np.full(n, float(weight), dtype=np.float64)
+
+
+def degraded_matrix(w, alive, link_up=None) -> np.ndarray:
+    """The fault-degraded mixing matrix W' (the dense oracle, float64).
+
+    Every off-diagonal entry whose edge is down — either endpoint not in
+    ``alive``, or the link itself masked by ``link_up`` — is zeroed and its
+    mass moved onto the *receiver's* diagonal, so W' stays row-stochastic
+    for any W, symmetric when W and the masks are symmetric (and therefore
+    doubly stochastic when W is).  A node that loses every edge — dead, or
+    isolated by link failures — self-averages: its row becomes identity and
+    its parameters are untouched by the mixing step.
+
+    This single rule is the semantic shared by ``GossipProgram.degrade``
+    (the pre-enumerated permanent-crash program transform), the runtime
+    masked interpreters (``apply_masked`` / ``apply_shard_masked``), and
+    the in-kernel renormalization of the fused Pallas apply: all three
+    realize exactly this matrix for the same masks.
+    """
+    w = np.asarray(w, dtype=np.float64)
+    n = w.shape[0]
+    alive = np.asarray(alive, dtype=np.float64).reshape(n)
+    em = np.outer(alive, alive)
+    if link_up is not None:
+        em = em * np.asarray(link_up, dtype=np.float64)
+    off = w * em
+    np.fill_diagonal(off, 0.0)
+    return off + np.diag(1.0 - off.sum(axis=1))
 
 
 def _flat_axis_index(axis_names):
@@ -224,6 +255,138 @@ class GossipProgram:
                 srcs[d, k] = s
                 weights[d, k + 1] = wv[d]
         return srcs, weights
+
+    def degrade(self, alive) -> "GossipProgram":
+        """The program for the surviving membership ``alive`` ((n,) bools).
+
+        Removes every permute pair with a dead endpoint and renormalizes by
+        moving the dropped weight onto the receiver's self weight, so the
+        result realizes exactly ``degraded_matrix(self.matrix(), alive)``:
+        still row-stochastic, symmetric when the base is, dead/isolated
+        nodes self-averaging.  Programs with non-permute ops (AllReduce /
+        GatherRow) fall back to one GatherRow of the degraded dense matrix.
+
+        This is the *permanent-crash* path: each alive-set yields one new
+        (cached, hashable) program, pre-enumerated by
+        ``Topology.distinct_programs`` so crashes never recompile mid-run.
+        Transient faults instead keep the base program and feed runtime
+        masks to ``apply_masked`` — same matrix, zero new executables.
+        """
+        alive_t = tuple(bool(a) for a in np.asarray(alive).reshape(-1))
+        if len(alive_t) != self.n:
+            raise ValueError(f"alive mask has {len(alive_t)} entries, n={self.n}")
+        if all(alive_t):
+            return self
+        return _degrade_cached(self, alive_t)
+
+    # -- runtime-masked interpreters (transient faults; no new executables) --
+    def _masked_tables(self, alive, link_up):
+        """(srcs const, per-node effective weight rows) under runtime masks.
+
+        ``alive`` is an (n,) runtime array, ``link_up`` an optional (n, n)
+        runtime array; the returned weights are traced values, so one
+        jitted executable serves every fault realization.
+        """
+        tables = self.permute_tables()
+        if tables is None:
+            return None
+        srcs_np, weights_np = tables
+        srcs = jnp.asarray(srcs_np)
+        w = jnp.asarray(weights_np)
+        af = jnp.asarray(alive, jnp.float32).reshape(self.n)
+        m = af[srcs] * af[:, None]
+        if link_up is not None:
+            lm = jnp.asarray(link_up, jnp.float32)
+            m = m * lm[jnp.arange(self.n)[:, None], srcs]
+        wn = w[:, 1:] * m
+        w0 = w[:, 0] + jnp.sum(w[:, 1:] * (1.0 - m), axis=1)
+        return srcs_np, jnp.concatenate([w0[:, None], wn], axis=1)
+
+    def _masked_matrix(self, alive, link_up):
+        """Runtime degraded matrix (traced) — the dense fallback/oracle."""
+        w0 = jnp.asarray(self.matrix(), jnp.float32)
+        af = jnp.asarray(alive, jnp.float32).reshape(self.n)
+        em = af[:, None] * af[None, :]
+        if link_up is not None:
+            em = em * jnp.asarray(link_up, jnp.float32)
+        off = w0 * em * (1.0 - jnp.eye(self.n, dtype=jnp.float32))
+        return off + jnp.diag(1.0 - jnp.sum(off, axis=1))
+
+    def apply_masked(
+        self, tree: PyTree, alive, *, link_up=None, engine: str = "stacked"
+    ) -> PyTree:
+        """One fault-degraded mixing step with *runtime* masks.
+
+        Equivalent to ``self.degrade(alive).apply(...)`` (plus link
+        masking) but with the masks as traced inputs: a new fault
+        realization changes only array values, never the executable.
+        ``engine="dense"`` multiplies by the runtime degraded matrix (the
+        oracle); ``engine="stacked"`` uses the masked permute tables when
+        the program is all-PPermute and the dense matrix otherwise.
+        """
+        if engine not in ("dense", "stacked"):
+            raise ValueError(f"unknown engine {engine!r}")
+        masked = self._masked_tables(alive, link_up)
+        if engine == "dense" or masked is None:
+            wm = self._masked_matrix(alive, link_up)
+
+            def _mix(x):
+                return jnp.einsum(
+                    "ij,j...->i...", wm, x.astype(jnp.float32)
+                ).astype(x.dtype)
+
+            return jax.tree.map(_mix, tree)
+        srcs_np, weights = masked
+        n = self.n
+
+        def _col(v, ndim):
+            return v.reshape((n,) + (1,) * (ndim - 1))
+
+        def _mix(x):
+            xf = x.astype(jnp.float32)
+            acc = _col(weights[:, 0], x.ndim) * xf
+            for k in range(srcs_np.shape[1]):
+                gathered = jnp.take(xf, jnp.asarray(srcs_np[:, k]), axis=0)
+                acc = acc + _col(weights[:, k + 1], x.ndim) * gathered
+            return acc.astype(x.dtype)
+
+        return jax.tree.map(_mix, tree)
+
+    def apply_shard_masked(self, local: PyTree, axis_names, alive, *, link_up=None):
+        """``apply_masked`` on per-node values inside ``shard_map``.
+
+        Dropped edges still traverse the wire (the permute schedule is
+        compiled); their weight is zeroed and renormalized onto self at the
+        receiver — the transient-fault trade: no recompile, dead-edge bytes
+        still move.  Permanent crashes use ``degrade`` to actually remove
+        the sends.  Non-permute programs fall back to all-gather + a
+        runtime row of the degraded matrix.
+        """
+        n = self.n
+        idx = _flat_axis_index(axis_names)
+        masked = self._masked_tables(alive, link_up)
+        if masked is None:
+            wm = self._masked_matrix(alive, link_up)
+
+            def _mix(x):
+                xf = x.astype(jnp.float32)
+                row = jax.lax.dynamic_slice_in_dim(wm, idx, 1, 0)[0]
+                g = jax.lax.all_gather(xf, axis_names, axis=0, tiled=False)
+                return jnp.einsum("g...,g->...", g, row).astype(x.dtype)
+
+            return jax.tree.map(_mix, local)
+        _, weights = masked
+        wrow = weights[idx]
+
+        def _mix(x):
+            xf = x.astype(jnp.float32)
+            acc = wrow[0] * xf
+            for k, op in enumerate(self.ops):
+                y = jax.lax.ppermute(xf, axis_names, list(op.perm))
+                acc = acc + wrow[k + 1] * y
+            return acc.astype(x.dtype)
+
+        return jax.tree.map(_mix, local)
 
     @staticmethod
     def fuse(programs: Sequence["GossipProgram"], name: Optional[str] = None):
@@ -370,6 +533,46 @@ class GossipProgram:
 
 
 @lru_cache(maxsize=512)
+def _degrade_cached(program: GossipProgram, alive: tuple) -> GossipProgram:
+    n = program.n
+    dead = [i for i, a in enumerate(alive) if not a]
+    name = f"{program.name}!dead[{','.join(map(str, dead))}]"
+    if not all(isinstance(op, PPermute) for op in program.ops):
+        # AllReduce / GatherRow programs: one dense row of the degraded W.
+        return GossipProgram(
+            name=name,
+            n=n,
+            ops=(GatherRow(_matrix_to_tuple(
+                degraded_matrix(program.matrix(), alive)
+            )),),
+            self_weight=0.0,
+        )
+    self_w = _weight_column(program.self_weight, n).copy()
+    ops = []
+    for op in program.ops:
+        wv = _weight_column(op.weight, n)
+        perm, weight = [], np.zeros(n)
+        for s, d in op.perm:
+            if alive[s] and alive[d]:
+                perm.append((s, d))
+                weight[d] = wv[d]
+            elif alive[d]:
+                self_w[d] += wv[d]  # receiver renormalizes the lost edge
+        if perm:
+            ops.append(
+                PPermute(tuple(perm), tuple(float(v) for v in weight))
+            )
+    for i in dead:
+        self_w[i] = 1.0  # dead nodes self-average: params frozen
+    return GossipProgram(
+        name=name,
+        n=n,
+        ops=tuple(ops),
+        self_weight=tuple(float(v) for v in self_w),
+    )
+
+
+@lru_cache(maxsize=512)
 def _program_matrix(program: GossipProgram) -> np.ndarray:
     n = program.n
     w = np.diag(_weight_column(program.self_weight, n))
@@ -426,6 +629,27 @@ class FusedProgram(GossipProgram):
         do not apply (each stage has its own — use ``stages[i]``)."""
         return None
 
+    def degrade(self, alive) -> "GossipProgram":
+        """Stage-wise degrade: each round renormalizes independently (NOT a
+        mask of the product matrix — faults apply to every wire round)."""
+        alive_t = tuple(bool(a) for a in np.asarray(alive).reshape(-1))
+        if all(alive_t):
+            return self
+        return GossipProgram.fuse(
+            [p.degrade(alive_t) for p in self.stages],
+            name=f"{self.name}!dead[{','.join(str(i) for i, a in enumerate(alive_t) if not a)}]",
+        )
+
+    def apply_masked(self, tree, alive, *, link_up=None, engine="stacked"):
+        for p in self.stages:
+            tree = p.apply_masked(tree, alive, link_up=link_up, engine=engine)
+        return tree
+
+    def apply_shard_masked(self, local, axis_names, alive, *, link_up=None):
+        for p in self.stages:
+            local = p.apply_shard_masked(local, axis_names, alive, link_up=link_up)
+        return local
+
     def apply_dense(self, stacked: PyTree) -> PyTree:
         """One einsum with the *product* matrix — the fused dense oracle."""
         if self.is_identity:
@@ -448,6 +672,92 @@ class FusedProgram(GossipProgram):
         for p in self.stages:
             local = p.apply_shard(local, axis_names)
         return local
+
+
+# ---------------------------------------------------------------------------
+# Hub-balanced round scheduling
+# ---------------------------------------------------------------------------
+
+def hub_balanced_rounds(
+    program: GossipProgram, rounds: int, name: Optional[str] = None
+) -> GossipProgram:
+    """Distribute a program's permute rounds across ``rounds`` fused steps.
+
+    A static edge-colored program applies all C matchings every step, so a
+    hot vertex (the star hub, degree Δ) sends Δ·P bytes per step even
+    though the mean is ~2P.  This scheduler round-robins the C matchings
+    over ``rounds`` stage programs — stage h applies matchings
+    ``ops[h::rounds]`` and soaks the unapplied neighbor mass into its self
+    weight, so every stage is row-stochastic (symmetric/doubly stochastic
+    when the base is) and each matching runs exactly once per cycle.  The
+    hub's *per-step peak* send volume drops from Δ·P to ⌈Δ/rounds⌉·P.
+
+    The cycle's product matrix is not W^rounds — it is a time-varying
+    schedule over the same edge set (each edge averaged once per cycle at
+    its base weight), trading per-cycle mixing strength for a ``rounds``×
+    lower peak link load.  Mean preservation and consensus contraction are
+    kept (pinned by tests); use via ``mix_rounds`` + ``hub_balance`` on the
+    engines.
+    """
+    rounds = int(rounds)
+    if rounds <= 1:
+        return program
+    if not all(isinstance(op, PPermute) for op in program.ops):
+        raise ValueError(
+            f"hub_balanced_rounds needs an all-PPermute program, got "
+            f"{program.describe()}"
+        )
+    if len(program.ops) <= 1:
+        return program
+    n = program.n
+    base_self = _weight_column(program.self_weight, n)
+    cols = [_weight_column(op.weight, n) for op in program.ops]
+    # receiver-side mass per op: only perm-participating dsts carry weight
+    masks = []
+    for op in program.ops:
+        m = np.zeros(n)
+        for _, d in op.perm:
+            m[d] = 1.0
+        masks.append(m)
+    stages = []
+    for h in range(rounds):
+        picked = list(range(h, len(program.ops), rounds))
+        sw = base_self.copy()
+        for k, (wv, m) in enumerate(zip(cols, masks)):
+            if k not in picked:
+                sw += wv * m  # unapplied matchings self-average this step
+        stages.append(
+            GossipProgram(
+                name=f"{program.name}@round{h}",
+                n=n,
+                ops=tuple(program.ops[k] for k in picked),
+                self_weight=tuple(float(v) for v in sw),
+            )
+        )
+    return GossipProgram.fuse(
+        stages, name=name or f"hub_balanced[{program.name}/H{rounds}]"
+    )
+
+
+def maybe_hub_balanced(progs: Sequence[GossipProgram], rounds: int):
+    """The shared eligibility rule for hub-balancing a fused gossip round.
+
+    Reschedules ONLY when the ``rounds`` fused steps are one *static*
+    multi-matching permute program repeated — time-varying families keep
+    their own rotation, single-matching and non-permute programs have
+    nothing to rotate.  Both the Topology and the SPMD trainer route
+    through this helper so the engines always hub-balance the same
+    programs (their shared-schedule invariant).  Returns the rescheduled
+    program, or ``None`` when plain fusion should apply.
+    """
+    if (
+        rounds > 1
+        and len({p.cache_key for p in progs}) == 1
+        and progs[0].permute_tables() is not None
+        and len(progs[0].ops) > 1
+    ):
+        return hub_balanced_rounds(progs[0], rounds)
+    return None
 
 
 # ---------------------------------------------------------------------------
@@ -699,19 +1009,47 @@ def _compile_one(graph) -> GossipProgram:
 # Cost model
 # ---------------------------------------------------------------------------
 
-def program_comm_bytes(program: GossipProgram, param_bytes: int) -> int:
+def _live_pairs(op: PPermute, n: int, alive=None, link_up=None):
+    """The (src, dst) pairs that actually move bytes under this permute.
+
+    A pair moves nothing when its receiver weight is zero (a degraded
+    program keeps renormalized zero entries out of ``perm``, but masked /
+    hand-built programs may carry them) or when a fault mask kills either
+    endpoint or the link — dead edges must not be billed (at high fault
+    rates they dominate a naive ``len(perm)`` count).
+    """
+    wv = _weight_column(op.weight, n)
+    pairs = []
+    for s, d in op.perm:
+        if wv[d] == 0.0:
+            continue
+        if alive is not None and not (alive[s] and alive[d]):
+            continue
+        if link_up is not None and not link_up[s][d]:
+            continue
+        pairs.append((s, d))
+    return pairs
+
+
+def program_comm_bytes(
+    program: GossipProgram, param_bytes: int, *, alive=None, link_up=None
+) -> int:
     """Mean bytes each node sends per mixing step under this program.
 
     A partial permute (an edge-colored matching round) only moves buffers
-    on the ``len(perm)`` participating source→dest links, so it costs
-    ``P · len(perm)/n`` per node on average — an edge-colored star totals
-    ~2P per node versus the (n-1)·P ring all-gather of ``GatherRow``.
+    on its participating source→dest links, so it costs ``P · pairs/n``
+    per node on average — an edge-colored star totals ~2P per node versus
+    the (n-1)·P ring all-gather of ``GatherRow``.  ``alive`` / ``link_up``
+    bill a fault realization by its surviving edges only (the ``GatherRow``
+    all-gather still moves every replica regardless of masks).
     """
     total = 0.0
     n = program.n
+    alive_l = None if alive is None else [bool(a) for a in np.asarray(alive)]
+    link_l = None if link_up is None else np.asarray(link_up).tolist()
     for op in program.ops:
         if isinstance(op, PPermute):
-            total += param_bytes * (len(op.perm) / n)
+            total += param_bytes * (len(_live_pairs(op, n, alive_l, link_l)) / n)
         elif isinstance(op, AllReduce):
             total += 2 * param_bytes * (n - 1) / n
         else:  # GatherRow: ring all-gather — each node forwards P to n-1 peers
@@ -719,15 +1057,20 @@ def program_comm_bytes(program: GossipProgram, param_bytes: int) -> int:
     return int(total)
 
 
-def program_max_node_bytes(program: GossipProgram, param_bytes: int) -> int:
+def program_max_node_bytes(
+    program: GossipProgram, param_bytes: int, *, alive=None, link_up=None
+) -> int:
     """Bytes the busiest node sends per mixing step (the latency-critical
     figure: a star hub participates in every matching round, so its send
-    volume is Δ·P even though the mean is ~2P)."""
+    volume is Δ·P even though the mean is ~2P — ``hub_balanced_rounds``
+    exists to cap exactly this number)."""
     n = program.n
     sends = np.zeros(n)
+    alive_l = None if alive is None else [bool(a) for a in np.asarray(alive)]
+    link_l = None if link_up is None else np.asarray(link_up).tolist()
     for op in program.ops:
         if isinstance(op, PPermute):
-            for s, _ in op.perm:
+            for s, _ in _live_pairs(op, n, alive_l, link_l):
                 sends[s] += param_bytes
         elif isinstance(op, AllReduce):
             sends += 2 * param_bytes * (n - 1) / n

@@ -36,6 +36,10 @@ import numpy as np
 
 from repro.core import dbench
 from repro.core.dsgd import Topology
+from repro.core.faults import (
+    adopt_neighbor_average, realization_arrays, rejoin_neighbors,
+    track_membership,
+)
 from repro.core.schedule import GossipProgram
 from repro.optim.sgd import Optimizer
 
@@ -72,6 +76,7 @@ class DecentralizedSimulator:
         mixing: str = "dense",  # "dense" (paper equation) | "shift" (stacked)
         mix_every: int = 1,
         mix_rounds: int = 1,
+        hub_balance: bool = False,
         collect_norms: bool = False,
         has_rng: bool = False,
     ):
@@ -79,12 +84,21 @@ class DecentralizedSimulator:
           loss_fn: per-node ``loss_fn(params, batch)`` (or with rng as third
             arg when ``has_rng``) returning a scalar.
           optimizer: per-node optimizer (state carried per node).
-          topology: which SGD implementation to simulate.
+          topology: which SGD implementation to simulate.  A topology with
+            a ``fault_model`` runs the fault-aware step: stragglers/dead
+            nodes skip their local update, transient drops degrade the
+            mixing matrix via *runtime* masks (one executable per program,
+            exactly as many as the fault-free run), permanent crashes
+            select the pre-enumerated degraded program, and recovered
+            nodes rejoin by adopting their neighbors' average.
           mixing: which ``GossipProgram`` interpreter executes W θ — "dense"
             (paper-faithful matrix product) or "shift" (stacked roll/gather).
           mix_rounds: gossip rounds fused into each mixing step — H
             consecutive schedule steps (e.g. a full one-peer cycle) run as
             ONE cached executable instead of H dispatches.
+          hub_balance: with ``mix_rounds > 1`` on a static multi-matching
+            program, rotate its edge-colored matchings across the H rounds
+            (``hub_balanced_rounds``) to cap hot-vertex peak send volume.
         """
         if mixing not in _ENGINES:
             raise ValueError(
@@ -97,8 +111,11 @@ class DecentralizedSimulator:
         self.mixing = mixing
         self.mix_every = max(int(mix_every), 1)
         self.mix_rounds = max(int(mix_rounds), 1)
+        self.hub_balance = bool(hub_balance)
         self.collect_norms = collect_norms
         self.has_rng = has_rng
+        self.fault_model = topology.fault_model
+        self._last_membership = None
         self._step_cache: dict[Any, Callable] = {}
 
     # -- state ----------------------------------------------------------------
@@ -114,26 +131,34 @@ class DecentralizedSimulator:
         return SimState(params=stacked, opt_state=opt, step=0)
 
     # -- one training step ------------------------------------------------------
-    def _build_step(self, program: Optional[GossipProgram]):
-        """program: compiled mixing schedule; None => pure local update."""
+    def _build_step(self, program: Optional[GossipProgram], faulty: bool = False):
+        """program: compiled mixing schedule; None => pure local update.
+
+        ``faulty`` builds the fault-aware signature: an extra runtime mask
+        pytree (``realization_arrays``) gates per-node updates and degrades
+        the mixing weights — mask *values* change per realization, the
+        executable never does.
+        """
         engine = _ENGINES[self.mixing]
 
-        def step(params, opt_state, batch, lr, rng):
+        def _grads(params, batch, rng):
             if self.has_rng:
                 rngs = jax.random.split(rng, self.n)
-                loss, grads = jax.vmap(jax.value_and_grad(self.loss_fn))(
+                return jax.vmap(jax.value_and_grad(self.loss_fn))(
                     params, batch, rngs
                 )
-            else:
-                loss, grads = jax.vmap(jax.value_and_grad(self.loss_fn))(
-                    params, batch
-                )
+            return jax.vmap(jax.value_and_grad(self.loss_fn))(params, batch)
 
-            norms = (
+        def _norms(params):
+            return (
                 jax.vmap(dbench.param_l2_norms)(params)
                 if self.collect_norms
                 else jnp.zeros((self.n, 0), jnp.float32)
             )
+
+        def step(params, opt_state, batch, lr, rng):
+            loss, grads = _grads(params, batch, rng)
+            norms = _norms(params)
 
             if self.topology.centralized:
                 # C_complete: average gradients globally; replicas stay identical.
@@ -157,23 +182,63 @@ class DecentralizedSimulator:
                 new_params = program.apply(new_params, engine=engine)
             return new_params, new_opt, loss, norms
 
-        return jax.jit(step)
+        def fault_step(params, opt_state, batch, lr, rng, fault):
+            loss, grads = _grads(params, batch, rng)
+            norms = _norms(params)
 
-    def _step_for(self, step: int, epoch: int, mix: bool = True):
-        """The jitted executable for one iteration, cached per program."""
+            def _mix(tree):
+                return program.apply_masked(
+                    tree, fault["alive"], link_up=fault["link"], engine=engine
+                )
+
+            if program is not None and self.topology.mix_order == "pre":
+                params = _mix(params)
+            new_params, new_opt = jax.vmap(
+                self.optimizer.update, in_axes=(0, 0, 0, None)
+            )(grads, opt_state, params, lr)
+            # stragglers and dead nodes skip their local update entirely
+            u = fault["update"]
+
+            def _gate(new, old):
+                ucol = u.reshape((self.n,) + (1,) * (new.ndim - 1))
+                return jnp.where(ucol > 0, new, old)
+
+            new_params = jax.tree.map(_gate, new_params, params)
+            new_opt = jax.tree.map(_gate, new_opt, opt_state)
+            if program is not None and self.topology.mix_order == "post":
+                new_params = _mix(new_params)
+            return new_params, new_opt, loss, norms
+
+        return jax.jit(fault_step if faulty else step)
+
+    def _step_for(self, step: int, epoch: int, mix: bool = True,
+                  program_alive=None):
+        """The jitted executable for one iteration, cached per program.
+
+        ``program_alive`` (permanent-crash membership) selects the
+        pre-enumerated degraded program; a non-None value also selects the
+        fault-aware step signature.
+        """
+        faulty = self.fault_model is not None
         if self.topology.centralized:
             key = "__centralized__"
             program = None
+            faulty = False
         elif not mix:
             key = "__local__"
             program = None
         else:
             program = self.topology.fused_program_at(
-                step=step, epoch=epoch, rounds=self.mix_rounds
+                step=step, epoch=epoch, rounds=self.mix_rounds,
+                hub_balance=self.hub_balance,
             )
+            if program is not None and program_alive is not None:
+                program = program.degrade(program_alive)
             key = program.cache_key if program is not None else "__local__"
+        if faulty:
+            key = (key, "faulty")
         if key not in self._step_cache:
-            self._step_cache[key] = self._build_step(program)
+            self._step_cache[key] = self._build_step(program, faulty=faulty)
         return self._step_cache[key]
 
     def train_step(
@@ -193,20 +258,54 @@ class DecentralizedSimulator:
           (new_state, per_node_loss (n,), per_node_norms (n, n_leaves)).
         """
         ctl = self.topology.controller
+        fr = None
+        if self.fault_model is not None:
+            fr = self.fault_model.at(state.step)
+            for node in fr.rejoin:
+                # elastic re-entry: adopt the alive neighbors' average
+                nbrs = rejoin_neighbors(
+                    self.topology, fr, node, step=state.step, epoch=epoch,
+                    mix_every=self.mix_every,
+                )
+                state = SimState(
+                    adopt_neighbor_average(state.params, node, nbrs),
+                    adopt_neighbor_average(state.opt_state, node, nbrs),
+                    state.step,
+                )
+            self._last_membership = track_membership(
+                self._last_membership, fr, ctl, state.step
+            )
         if ctl is not None and ctl.should_probe(state.step):
-            from repro.core.consensus import consensus_distance_jit
+            if fr is not None:
+                from repro.core.consensus import consensus_distance_masked_jit
 
-            ctl.observe(float(consensus_distance_jit(state.params)), state.step)
+                xi = consensus_distance_masked_jit(
+                    state.params, jnp.asarray(fr.alive, jnp.float32)
+                )
+            else:
+                from repro.core.consensus import consensus_distance_jit
+
+                xi = consensus_distance_jit(state.params)
+            ctl.observe(float(xi), state.step)
         mix = (state.step + 1) % self.mix_every == 0
         # index time-varying schedules by gossip round (see SPMDTrainer):
         # raw-step indexing under mix_every=H would alias period-p families
         # to a single phase whenever p divides H.
-        fn = self._step_for(state.step // self.mix_every, epoch, mix=mix)
+        fn = self._step_for(
+            state.step // self.mix_every, epoch, mix=mix,
+            program_alive=(
+                fr.program_alive
+                if fr is not None and not fr.program_alive.all()
+                else None
+            ),
+        )
         if rng is None:
             rng = jax.random.PRNGKey(0)
-        p, o, loss, norms = fn(
-            state.params, state.opt_state, batch, jnp.float32(lr), rng
-        )
+        args = (state.params, state.opt_state, batch, jnp.float32(lr), rng)
+        if fr is not None and not self.topology.centralized:
+            p, o, loss, norms = fn(*args, realization_arrays(fr))
+        else:
+            p, o, loss, norms = fn(*args)
         return SimState(p, o, state.step + 1), loss, norms
 
     # -- full run helper ---------------------------------------------------------

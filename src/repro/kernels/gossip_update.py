@@ -28,7 +28,13 @@ Two granularities share one kernel body:
 
 ``lr``/``beta`` ride in a (2,) SMEM vector at *runtime* — LR schedules do
 not retrigger compiles — and ``interpret`` auto-detects the backend
-(compiled on TPU, interpreter elsewhere).
+(compiled on TPU, interpreter elsewhere).  The per-node weight row is a
+runtime operand too, and a second per-node (deg+1,) SMEM *fault row*
+``[update, edge_1..edge_deg]`` gates the local update (stragglers/dead)
+and masks permute edges, renormalizing dropped weight onto self in-kernel
+(``degraded_matrix`` semantics): one executable serves every transient
+fault realization, and the all-ones row reproduces the fault-free math
+bit-for-bit.
 
 Layout: parameters are flattened and blocked 1-D ((block,) VMEM tiles,
 8·128-aligned); neighbor buffers arrive stacked (deg, P) — on TPU these are
@@ -69,38 +75,55 @@ def _auto_block(block, interpret):
     return (1 << 20) if interpret else 1024
 
 
-def _mix_block(w, theta, nbrs, grad, mom, lr, beta, *, deg, mix_order, out_dtype):
-    """Shared kernel math on one VMEM tile; ``w[k]`` scalar-indexes SMEM."""
+def _mix_block(w, f, theta, nbrs, grad, mom, lr, beta, *, deg, mix_order,
+               out_dtype):
+    """Shared kernel math on one VMEM tile; ``w[k]`` scalar-indexes SMEM.
+
+    ``f`` is the *fault row* accessor (SMEM, runtime): ``f(0)`` gates this
+    node's local update (0 = straggler/dead: gradient discarded, momentum
+    untouched) and ``f(i+1)`` masks permute round i's edge.  A dropped edge
+    zeroes its weight and renormalizes IN-KERNEL — the lost mass moves onto
+    the self weight, keeping the realized row stochastic — so one compiled
+    executable serves every transient-fault realization (the all-ones row
+    reproduces the fault-free math bit-for-bit).
+    """
     g = grad.astype(jnp.float32)
-    m_new = beta * mom.astype(jnp.float32) + g
+    mom32 = mom.astype(jnp.float32)
+    u = f(0)
+    m_new = u * (beta * mom32 + g) + (1.0 - u) * mom32
     base = theta.astype(jnp.float32)
-    if mix_order == "post":
-        acc = w(0) * (base - lr * m_new)
-    else:  # pre: mix raw params, descend afterwards
-        acc = w(0) * base
+    self_w = w(0)
     for i in range(deg):
-        acc = acc + w(i + 1) * nbrs(i).astype(jnp.float32)
+        self_w = self_w + (1.0 - f(i + 1)) * w(i + 1)
+    if mix_order == "post":
+        acc = self_w * (base - lr * u * m_new)
+    else:  # pre: mix raw params, descend afterwards
+        acc = self_w * base
+    for i in range(deg):
+        acc = acc + f(i + 1) * w(i + 1) * nbrs(i).astype(jnp.float32)
     if mix_order == "pre":
-        acc = acc - lr * m_new
+        acc = acc - lr * u * m_new
     return acc.astype(out_dtype), m_new
 
 
-def _kernel(sc_ref, w_ref, theta_ref, nbr_ref, grad_ref, mom_ref, out_ref,
-            mom_out_ref, *, deg: int, mix_order: str):
+def _kernel(sc_ref, w_ref, f_ref, theta_ref, nbr_ref, grad_ref, mom_ref,
+            out_ref, mom_out_ref, *, deg: int, mix_order: str):
     out, m_new = _mix_block(
-        lambda k: w_ref[k], theta_ref[...], lambda i: nbr_ref[i],
-        grad_ref[...], mom_ref[...], sc_ref[0], sc_ref[1],
+        lambda k: w_ref[k], lambda k: f_ref[k], theta_ref[...],
+        lambda i: nbr_ref[i], grad_ref[...], mom_ref[...],
+        sc_ref[0], sc_ref[1],
         deg=deg, mix_order=mix_order, out_dtype=out_ref.dtype,
     )
     out_ref[...] = out
     mom_out_ref[...] = m_new
 
 
-def _program_kernel(sc_ref, w_ref, theta_ref, nbr_ref, grad_ref, mom_ref,
-                    out_ref, mom_out_ref, *, deg: int, mix_order: str):
+def _program_kernel(sc_ref, w_ref, f_ref, theta_ref, nbr_ref, grad_ref,
+                    mom_ref, out_ref, mom_out_ref, *, deg: int, mix_order: str):
     out, m_new = _mix_block(
-        lambda k: w_ref[0, k], theta_ref[0], lambda i: nbr_ref[0, i],
-        grad_ref[0], mom_ref[0], sc_ref[0], sc_ref[1],
+        lambda k: w_ref[0, k], lambda k: f_ref[0, k], theta_ref[0],
+        lambda i: nbr_ref[0, i], grad_ref[0], mom_ref[0],
+        sc_ref[0], sc_ref[1],
         deg=deg, mix_order=mix_order, out_dtype=out_ref.dtype,
     )
     out_ref[0] = out
@@ -110,8 +133,8 @@ def _program_kernel(sc_ref, w_ref, theta_ref, nbr_ref, grad_ref, mom_ref,
 @functools.partial(
     jax.jit, static_argnames=("block", "interpret", "mix_order")
 )
-def _gossip_update(theta, neighbors, weights, grad, momentum, scalars, *,
-                   block: int, interpret: bool, mix_order: str):
+def _gossip_update(theta, neighbors, weights, fault, grad, momentum, scalars,
+                   *, block: int, interpret: bool, mix_order: str):
     (p,) = theta.shape
     deg = neighbors.shape[0]
     block = min(block, p)
@@ -124,6 +147,7 @@ def _gossip_update(theta, neighbors, weights, grad, momentum, scalars, *,
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),           # [lr, beta]
             pl.BlockSpec(memory_space=pltpu.SMEM),           # weights
+            pl.BlockSpec(memory_space=pltpu.SMEM),           # fault row
             pl.BlockSpec((block,), lambda i: (i,)),          # theta
             pl.BlockSpec((deg, block), lambda i: (0, i)),    # neighbors
             pl.BlockSpec((block,), lambda i: (i,)),          # grad
@@ -138,7 +162,8 @@ def _gossip_update(theta, neighbors, weights, grad, momentum, scalars, *,
             jax.ShapeDtypeStruct((p,), jnp.float32),
         ],
         interpret=interpret,
-    )(scalars, weights.astype(jnp.float32), theta, neighbors, grad, momentum)
+    )(scalars, weights.astype(jnp.float32), fault.astype(jnp.float32),
+      theta, neighbors, grad, momentum)
 
 
 def gossip_update(
@@ -150,17 +175,21 @@ def gossip_update(
     *,
     lr,
     beta,
+    fault: jax.Array | None = None,  # (deg + 1,) [update, edge_1..edge_deg]
     block: int | None = None,
     interpret: bool | None = None,
     mix_order: str = "post",
 ) -> tuple[jax.Array, jax.Array]:
-    """Returns (theta', m').  lr/beta are runtime values (no recompiles)."""
+    """Returns (theta', m').  lr/beta/weights/fault are runtime values — LR
+    schedules, degraded weight rows, and fault masks never recompile."""
     interpret = _auto_interpret(interpret)
     scalars = jnp.stack(
         [jnp.asarray(lr, jnp.float32), jnp.asarray(beta, jnp.float32)]
     )
+    if fault is None:
+        fault = jnp.ones((neighbors.shape[0] + 1,), jnp.float32)
     return _gossip_update(
-        theta, neighbors, weights, grad, momentum, scalars,
+        theta, neighbors, weights, fault, grad, momentum, scalars,
         block=_auto_block(block, interpret), interpret=interpret,
         mix_order=mix_order,
     )
@@ -169,8 +198,9 @@ def gossip_update(
 @functools.partial(
     jax.jit, static_argnames=("block", "interpret", "mix_order")
 )
-def _gossip_program_update(theta, neighbors, weights, grad, momentum, scalars,
-                           *, block: int, interpret: bool, mix_order: str):
+def _gossip_program_update(theta, neighbors, weights, fault, grad, momentum,
+                           scalars, *, block: int, interpret: bool,
+                           mix_order: str):
     n, p = theta.shape
     deg = neighbors.shape[1]
     block = min(block, p)
@@ -183,6 +213,9 @@ def _gossip_program_update(theta, neighbors, weights, grad, momentum, scalars,
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),              # [lr, beta]
             # this node's (deg+1,) weight row, selected into SMEM per node
+            pl.BlockSpec((1, deg + 1), lambda i, j: (i, 0),
+                         memory_space=pltpu.SMEM),
+            # this node's (deg+1,) fault row [update, edge_1..edge_deg]
             pl.BlockSpec((1, deg + 1), lambda i, j: (i, 0),
                          memory_space=pltpu.SMEM),
             pl.BlockSpec((1, block), lambda i, j: (i, j)),       # theta
@@ -199,7 +232,8 @@ def _gossip_program_update(theta, neighbors, weights, grad, momentum, scalars,
             jax.ShapeDtypeStruct((n, p), jnp.float32),
         ],
         interpret=interpret,
-    )(scalars, weights.astype(jnp.float32), theta, neighbors, grad, momentum)
+    )(scalars, weights.astype(jnp.float32), fault.astype(jnp.float32),
+      theta, neighbors, grad, momentum)
 
 
 def gossip_program_update(
@@ -211,17 +245,27 @@ def gossip_program_update(
     *,
     lr,
     beta,
+    fault: jax.Array | None = None,  # (n, deg + 1) [update, edge_1..edge_deg]
     block: int | None = None,
     interpret: bool | None = None,
     mix_order: str = "post",
 ) -> tuple[jax.Array, jax.Array]:
-    """Per-node-weight program executor over the stacked axis."""
+    """Per-node-weight program executor over the stacked axis.
+
+    ``weights`` and ``fault`` are runtime operands: degraded weight rows
+    and per-realization edge/update masks reuse the one cached executable
+    (the zero-recompile invariant under faults).
+    """
     interpret = _auto_interpret(interpret)
     scalars = jnp.stack(
         [jnp.asarray(lr, jnp.float32), jnp.asarray(beta, jnp.float32)]
     )
+    if fault is None:
+        fault = jnp.ones(
+            (theta.shape[0], neighbors.shape[1] + 1), jnp.float32
+        )
     return _gossip_program_update(
-        theta, neighbors, weights, grad, momentum, scalars,
+        theta, neighbors, weights, fault, grad, momentum, scalars,
         block=_auto_block(block, interpret), interpret=interpret,
         mix_order=mix_order,
     )
@@ -247,6 +291,25 @@ def _unflatten_stacked(mat, tree, sizes):
     return jax.tree.unflatten(jax.tree.structure(tree), out)
 
 
+def _fault_rows_stacked(fault, srcs, n):
+    """(n, deg+1) kernel fault rows [update, edge_1..deg] from runtime masks.
+
+    ``fault`` is the engines' mask pytree ({"update", "alive", "link"});
+    edge k of node i is up iff both endpoints are alive and the link
+    survives.  Idle slots (srcs[i, k] == i) carry zero weight, so their
+    mask value is irrelevant.
+    """
+    af = fault["alive"].astype(jnp.float32)
+    m = af[jnp.asarray(srcs)] * af[:, None]
+    link = fault.get("link")
+    if link is not None:
+        m = m * link.astype(jnp.float32)[
+            jnp.arange(n)[:, None], jnp.asarray(srcs)
+        ]
+    u = fault["update"].astype(jnp.float32)
+    return jnp.concatenate([u[:, None], m], axis=1)
+
+
 def fused_apply_stacked(
     program,
     params,     # pytree, leaves (n, ...)
@@ -255,6 +318,7 @@ def fused_apply_stacked(
     *,
     lr,
     beta,
+    fault=None,  # {"update": (n,), "alive": (n,), "link": (n, n)} or None
     mix_order: str = "post",
     block: int | None = None,
     interpret: bool | None = None,
@@ -267,6 +331,10 @@ def fused_apply_stacked(
     *post-update* θ\\*, for ``"pre"`` the raw θ, so nothing extra is
     materialized — and runs ``gossip_program_update``.  Returns
     ``(new_params, new_momentum)`` with the input tree structure.
+
+    ``fault`` carries runtime masks (``core/faults.realization_arrays``):
+    straggling/dead nodes skip the update, dropped edges renormalize onto
+    self inside the kernel — same executable for every realization.
 
     Raises ``ValueError`` for programs with non-permute ops (AllReduce /
     GatherRow / fused multi-round): those keep the interpreter path.
@@ -299,12 +367,13 @@ def fused_apply_stacked(
 
     lr32 = jnp.asarray(lr, jnp.float32)
     beta32 = jnp.asarray(beta, jnp.float32)
+    fault_rows = None if fault is None else _fault_rows_stacked(fault, srcs, n)
     if mix_order == "post":
         # the buffers on the wire are the senders' post-update params
-        wire = (
-            theta.astype(jnp.float32)
-            - lr32 * (beta32 * m_mat + g_mat.astype(jnp.float32))
-        ).astype(theta.dtype)
+        m_wire = beta32 * m_mat + g_mat.astype(jnp.float32)
+        if fault is not None:  # stragglers/dead send their un-updated params
+            m_wire = m_wire * fault["update"].astype(jnp.float32)[:, None]
+        wire = (theta.astype(jnp.float32) - lr32 * m_wire).astype(theta.dtype)
     else:
         wire = theta
     # (n, deg) fancy index along the node axis -> (n, deg, P) landing buffers
@@ -312,8 +381,8 @@ def fused_apply_stacked(
 
     out, m_new = gossip_program_update(
         theta, nbrs, jnp.asarray(weights), g_mat, m_mat,
-        lr=lr32, beta=beta32, block=block, interpret=interpret,
-        mix_order=mix_order,
+        lr=lr32, beta=beta32, fault=fault_rows, block=block,
+        interpret=interpret, mix_order=mix_order,
     )
     if pad:
         out = out[:, :p]
@@ -348,6 +417,7 @@ def fused_apply_shard(
     *,
     lr,
     beta,
+    fault=None,  # {"update": (n,), "alive": (n,), "link": (n, n)} or None
     mix_order: str = "post",
     block: int | None = None,
     interpret: bool | None = None,
@@ -358,7 +428,10 @@ def fused_apply_shard(
     One ``jax.lax.ppermute`` per compiled permute delivers the neighbor
     landing buffers (non-participating nodes receive zeros, matching the
     zero weight in their SMEM row); this node's (deg+1,) weight row is
-    selected by its flat axis index.  Returns ``(new_params, new_momentum)``.
+    selected by its flat axis index.  ``fault`` carries the replicated
+    runtime masks — this node slices its own update flag and edge-mask row,
+    so every realization reuses the one executable.  Returns
+    ``(new_params, new_momentum)``.
     """
     from repro.core.schedule import _flat_axis_index  # avoid import cycle
 
@@ -368,7 +441,7 @@ def fused_apply_shard(
             f"program {program.name!r} is not an all-PPermute single round; "
             "fused apply supports permute programs only"
         )
-    _, weights = tables
+    srcs, weights = tables
     interpret = _auto_interpret(interpret)
     block = _auto_block(block, interpret)
     theta, sizes = _flatten_local(params)
@@ -387,22 +460,27 @@ def fused_apply_shard(
         g_vec = jnp.pad(g_vec, (0, pad))
         m_vec = jnp.pad(m_vec, (0, pad))
 
+    idx = _flat_axis_index(axis_names)
     lr32 = jnp.asarray(lr, jnp.float32)
     beta32 = jnp.asarray(beta, jnp.float32)
+    frow = None
+    if fault is not None:
+        # this node's row of the shared edge-up mask formula
+        frow = _fault_rows_stacked(fault, srcs, srcs.shape[0])[idx]
     if mix_order == "post":
-        wire = (
-            theta.astype(jnp.float32)
-            - lr32 * (beta32 * m_vec + g_vec.astype(jnp.float32))
-        ).astype(theta.dtype)
+        m_wire = beta32 * m_vec + g_vec.astype(jnp.float32)
+        if fault is not None:
+            m_wire = m_wire * frow[0]
+        wire = (theta.astype(jnp.float32) - lr32 * m_wire).astype(theta.dtype)
     else:
         wire = theta
     nbrs = jnp.stack(
         [jax.lax.ppermute(wire, axis_names, list(op.perm)) for op in program.ops]
     )
-    wrow = jnp.asarray(weights)[_flat_axis_index(axis_names)]
+    wrow = jnp.asarray(weights)[idx]
     out, m_new = gossip_update(
         theta, nbrs, wrow, g_vec, m_vec,
-        lr=lr32, beta=beta32, block=block, interpret=interpret,
+        lr=lr32, beta=beta32, fault=frow, block=block, interpret=interpret,
         mix_order=mix_order,
     )
     if pad:

@@ -58,7 +58,9 @@ except ImportError:  # pragma: no cover
 
 from repro.core import dbench
 from repro.core.dsgd import Topology
-from repro.core.schedule import GossipProgram, compile_graph, dense_program
+from repro.core.schedule import (
+    GossipProgram, _flat_axis_index, compile_graph, dense_program,
+)
 from repro.launch import sharding as shd
 from repro.launch.mesh import gossip_axes_for, gossip_size
 from repro.models import transformer as tfm
@@ -108,13 +110,13 @@ class _LazyStep:
         self._build = build
         self._fn = None
 
-    def __call__(self, params, opt_state, batch, lr):
+    def __call__(self, params, opt_state, batch, lr, *fault):
         if self._fn is None:
             self._fn = self._build(batch)
-        return self._fn(params, opt_state, batch, lr)
+        return self._fn(params, opt_state, batch, lr, *fault)
 
-    def lower(self, params, opt_state, batch, lr):
-        return self._build(batch).lower(params, opt_state, batch, lr)
+    def lower(self, params, opt_state, batch, lr, *fault):
+        return self._build(batch).lower(params, opt_state, batch, lr, *fault)
 
 
 class SPMDTrainer:
@@ -133,6 +135,7 @@ class SPMDTrainer:
         mixing: str = "ppermute",  # ppermute (compiled program) | dense
         mix_every: int = 1,
         mix_rounds: int = 1,
+        hub_balance: bool = False,
         fused_apply: bool = False,
         donate: bool = True,
     ):
@@ -147,12 +150,26 @@ class SPMDTrainer:
         (``GossipProgram.fuse``), so e.g. a full one-peer exponential cycle
         is a single dispatch instead of H.
 
+        hub_balance: with ``mix_rounds > 1`` on a static multi-matching
+        program, rotate its edge-colored matchings across the H rounds
+        (``hub_balanced_rounds``) so hot vertices (the star hub) stop
+        sending in every round of every step.
+
         fused_apply: run optimizer update + gossip averaging as one fused
         Pallas pass (``kernels/gossip_update``) whenever the step's program
         is all-PPermute (circulant, matching, edge-colored); programs with
         AllReduce/GatherRow ops and non-mixing steps keep the interpreter
         path.  Requires plain momentum-SGD (the kernel re-implements the
         update); the dense-interpreter oracle remains the correctness bar.
+
+        Fault injection rides on the topology (``topology.fault_model``):
+        the trainer draws the same seeded realization stream as the
+        simulator, gates straggling/dead nodes' local updates, degrades the
+        mixing weights with runtime masks (transient faults reuse the
+        fault-free executable count; permanent crashes select from the
+        pre-enumerated degraded program set), rejoins recovered nodes from
+        their neighbors' average, and re-arms the consensus controller on
+        membership changes.
         """
         if mixing not in ("ppermute", "dense"):
             raise ValueError(f"mixing must be 'ppermute'|'dense', got {mixing!r}")
@@ -165,6 +182,9 @@ class SPMDTrainer:
         self.mixing = mixing
         self.mix_every = max(int(mix_every), 1)
         self.mix_rounds = max(int(mix_rounds), 1)
+        self.hub_balance = bool(hub_balance)
+        self.fault_model = topology.fault_model
+        self._last_membership = None
         self.fused_apply = bool(fused_apply)
         if self.fused_apply:
             hyper = optimizer.hyper or {}
@@ -214,6 +234,12 @@ class SPMDTrainer:
         ]
         if any(p is None for p in progs):
             return None
+        if self.hub_balance:
+            from repro.core.schedule import maybe_hub_balanced
+
+            balanced = maybe_hub_balanced(progs, self.mix_rounds)
+            if balanced is not None:
+                return balanced
         return GossipProgram.fuse(progs)
 
     def precompile_programs(self, n_epochs: int = 1) -> list[GossipProgram]:
@@ -240,6 +266,15 @@ class SPMDTrainer:
             if p is not None and p.cache_key not in seen:
                 seen.add(p.cache_key)
                 progs.append(p)
+        if self.fault_model is not None:
+            # permanent crashes select among degraded variants of the
+            # trainer's own (possibly fused/dense) programs — enumerate
+            # them here so they too compile at first use, never beyond.
+            from repro.core.faults import fold_degraded_programs
+
+            progs += [
+                d for _, d in fold_degraded_programs(progs, self.fault_model)
+            ]
         return progs
 
     # -- shardings -----------------------------------------------------------
@@ -348,13 +383,13 @@ class SPMDTrainer:
         return self._fused_split(program) is not None
 
     # -- the node-level step (shard_map realization) ------------------------------
-    def _node_step(self, program: Optional[GossipProgram]):
+    def _node_step(self, program: Optional[GossipProgram], faulty: bool = False):
         topo = self.topology
         opt = self.optimizer
         axes = self.gossip_axes
         fused = self._fused_split(program) if self.g > 1 else None
 
-        def node_step(params_st, opt_st, batch_st, lr):
+        def node_step(params_st, opt_st, batch_st, lr, fault=None):
             squeeze = self.g > 1
             params = jax.tree.map(lambda x: x[0], params_st) if squeeze else params_st
             opt_state = jax.tree.map(lambda x: x[0], opt_st) if squeeze else opt_st
@@ -367,6 +402,13 @@ class SPMDTrainer:
                 else jnp.zeros((0,), jnp.float32)
             )
 
+            def _mix(tree):
+                if fault is None:
+                    return program.apply_shard(tree, axes)
+                return program.apply_shard_masked(
+                    tree, axes, fault["alive"], link_up=fault["link"]
+                )
+
             if topo.centralized and self.g > 1:
                 grads = jax.tree.map(lambda g: jax.lax.pmean(g, axes), grads)
             if fused:
@@ -375,16 +417,29 @@ class SPMDTrainer:
                 first, rest = fused
                 new_p, new_o = fused_apply_shard(
                     first, params, grads, opt_state, axes,
-                    lr=lr, beta=self._fused_beta, mix_order=topo.mix_order,
+                    lr=lr, beta=self._fused_beta, fault=fault,
+                    mix_order=topo.mix_order,
                 )
                 for stage in rest:
-                    new_p = stage.apply_shard(new_p, axes)
+                    if fault is None:
+                        new_p = stage.apply_shard(new_p, axes)
+                    else:
+                        new_p = stage.apply_shard_masked(
+                            new_p, axes, fault["alive"], link_up=fault["link"]
+                        )
             else:
                 if topo.mix_order == "pre" and program is not None and self.g > 1:
-                    params = program.apply_shard(params, axes)
+                    params = _mix(params)
                 new_p, new_o = opt.update(grads, opt_state, params, lr)
+                if fault is not None:
+                    # stragglers/dead skip their local update (this node's
+                    # flag selected from the replicated mask)
+                    u = fault["update"][_flat_axis_index(axes)]
+                    gate = lambda nw, od: jnp.where(u > 0, nw, od)
+                    new_p = jax.tree.map(gate, new_p, params)
+                    new_o = jax.tree.map(gate, new_o, opt_state)
                 if topo.mix_order == "post" and program is not None and self.g > 1:
-                    new_p = program.apply_shard(new_p, axes)
+                    new_p = _mix(new_p)
 
             if squeeze:
                 new_p = jax.tree.map(lambda x: x[None], new_p)
@@ -393,10 +448,12 @@ class SPMDTrainer:
                 norms = norms[None]
             return new_p, new_o, loss, norms
 
-        return node_step
+        if faulty:
+            return node_step
+        return lambda p, o, b, lr: node_step(p, o, b, lr)
 
     # -- the stacked step (GSPMD realization; old-jax fallback) -------------------
-    def _stacked_step(self, program: Optional[GossipProgram]):
+    def _stacked_step(self, program: Optional[GossipProgram], faulty: bool = False):
         """vmap over the gossip axis + the program's stacked interpreter.
 
         Numerically identical to the shard_map realization; on a mesh whose
@@ -407,7 +464,7 @@ class SPMDTrainer:
         opt = self.optimizer
         fused = self._fused_split(program)
 
-        def stacked_step(params, opt_state, batch, lr):
+        def stacked_step(params, opt_state, batch, lr, fault=None):
             loss, grads = jax.vmap(self._grads_of)(params, batch)
             norms = (
                 jax.vmap(dbench.param_l2_norms)(params)
@@ -421,42 +478,81 @@ class SPMDTrainer:
                     ),
                     grads,
                 )
+
+            def _mix(tree):
+                if fault is None:
+                    return program.apply_stacked(tree)
+                return program.apply_masked(
+                    tree, fault["alive"], link_up=fault["link"]
+                )
+
             if fused:
                 from repro.kernels.gossip_update import fused_apply_stacked
 
                 first, rest = fused
                 new_p, new_o = fused_apply_stacked(
                     first, params, grads, opt_state,
-                    lr=lr, beta=self._fused_beta, mix_order=topo.mix_order,
+                    lr=lr, beta=self._fused_beta, fault=fault,
+                    mix_order=topo.mix_order,
                 )
                 for stage in rest:
-                    new_p = stage.apply_stacked(new_p)
+                    if fault is None:
+                        new_p = stage.apply_stacked(new_p)
+                    else:
+                        new_p = stage.apply_masked(
+                            new_p, fault["alive"], link_up=fault["link"]
+                        )
                 return new_p, new_o, loss, norms
             if topo.mix_order == "pre" and program is not None:
-                params = program.apply_stacked(params)
+                params = _mix(params)
             new_p, new_o = jax.vmap(opt.update, in_axes=(0, 0, 0, None))(
                 grads, opt_state, params, lr
             )
+            if fault is not None:
+                u = fault["update"]
+
+                def _gate(nw, od):
+                    ucol = u.reshape((self.g,) + (1,) * (nw.ndim - 1))
+                    return jnp.where(ucol > 0, nw, od)
+
+                new_p = jax.tree.map(_gate, new_p, params)
+                new_o = jax.tree.map(_gate, new_o, opt_state)
             if topo.mix_order == "post" and program is not None:
-                new_p = program.apply_stacked(new_p)
+                new_p = _mix(new_p)
             return new_p, new_o, loss, norms
 
-        return stacked_step
+        if faulty:
+            return stacked_step
+        return lambda p, o, b, lr: stacked_step(p, o, b, lr)
 
     # -- jitted step per program ----------------------------------------------
     def step_fn(self, epoch: int = 0, batch_abstract: Optional[PyTree] = None,
-                *, step: int = 0, mix: bool = True):
+                *, step: int = 0, mix: bool = True, program_alive=None):
+        """``program_alive``: permanent-crash membership — selects the
+        pre-enumerated degraded program.  A topology with a fault model
+        compiles the fault-aware signature (one extra runtime-mask arg):
+        transient realizations change mask values only, so the cached-
+        executable count matches the fault-free run."""
         program = self._program_at(step, epoch) if mix else None
         if not mix and self.topology.centralized:
             raise ValueError("mix_every > 1 is a decentralized-only feature")
+        if program is not None and program_alive is not None:
+            program = program.degrade(program_alive)
+        faulty = (
+            self.fault_model is not None
+            and self.g > 1
+            and not self.topology.centralized
+        )
         key = None if program is None else program.cache_key
+        if faulty:
+            key = (key, "faulty")
         if key in self._step_cache:
             return self._step_cache[key]
 
         gspec = P(self.gossip_axes) if self.gossip_axes else P()
         if self.g == 1:
             fn = jax.jit(
-                self._node_step(program),
+                self._node_step(program, faulty=faulty),
                 donate_argnums=(0, 1) if self.donate else (),
             )
             self._step_cache[key] = fn
@@ -469,7 +565,7 @@ class SPMDTrainer:
         )
 
         def shardings_for(batch_tree):
-            return (
+            base = (
                 self.param_shardings,
                 self.opt_shardings,
                 jax.tree.map(
@@ -480,18 +576,28 @@ class SPMDTrainer:
                 ),
                 NamedSharding(self.mesh, P()),
             )
+            if faulty:  # the runtime-mask pytree is replicated
+                rep = NamedSharding(self.mesh, P())
+                base = base + (
+                    {"update": rep, "alive": rep,
+                     "link": rep if self.fault_model.has_link_faults else None},
+                )
+            return base
 
         if self.use_shard_map:
-            node_step = self._node_step(program)
+            node_step = self._node_step(program, faulty=faulty)
 
             def build(batch_tree):
                 batch_specs = jax.tree.map(
                     lambda x: lead(len(x.shape) - 1), batch_tree
                 )
+                arg_specs = (in_specs[0], in_specs[1], batch_specs, P())
+                if faulty:
+                    arg_specs = arg_specs + (P(),)
                 mapped = _shard_map(
                     node_step,
                     mesh=self.mesh,
-                    in_specs=(in_specs[0], in_specs[1], batch_specs, P()),
+                    in_specs=arg_specs,
                     out_specs=(in_specs[0], in_specs[1], gspec, gspec),
                     axis_names=set(self.gossip_axes),
                 )
@@ -508,7 +614,7 @@ class SPMDTrainer:
                 )
 
         else:
-            stacked_step = self._stacked_step(program)
+            stacked_step = self._stacked_step(program, faulty=faulty)
 
             def build(batch_tree):
                 return jax.jit(
@@ -530,11 +636,39 @@ class SPMDTrainer:
     # -- public API ------------------------------------------------------------------
     def train_step(self, state: TrainState, batch: PyTree, lr: float, *, epoch: int = 0):
         ctl = self.topology.controller
-        if ctl is not None and self.g > 1 and ctl.should_probe(state.step):
-            from repro.core.consensus import consensus_distance_jit
+        fr = None
+        if self.fault_model is not None and self.g > 1:
+            from repro.core.faults import (
+                adopt_neighbor_average, rejoin_neighbors, track_membership,
+            )
 
+            fr = self.fault_model.at(state.step)
+            for node in fr.rejoin:
+                nbrs = rejoin_neighbors(
+                    self.topology, fr, node, step=state.step, epoch=epoch,
+                    mix_every=self.mix_every,
+                )
+                with _set_mesh(self.mesh):
+                    state = TrainState(
+                        adopt_neighbor_average(state.params, node, nbrs),
+                        adopt_neighbor_average(state.opt_state, node, nbrs),
+                        state.step,
+                    )
+            self._last_membership = track_membership(
+                self._last_membership, fr, ctl, state.step
+            )
+        if ctl is not None and self.g > 1 and ctl.should_probe(state.step):
             with _set_mesh(self.mesh):
-                xi = consensus_distance_jit(state.params)
+                if fr is not None:
+                    from repro.core.consensus import consensus_distance_masked_jit
+
+                    xi = consensus_distance_masked_jit(
+                        state.params, jnp.asarray(fr.alive, jnp.float32)
+                    )
+                else:
+                    from repro.core.consensus import consensus_distance_jit
+
+                    xi = consensus_distance_jit(state.params)
             ctl.observe(float(xi), state.step)
         mix = (state.step + 1) % self.mix_every == 0
         # Time-varying schedules advance per *gossip round*, not per raw
@@ -545,11 +679,19 @@ class SPMDTrainer:
         fn = self.step_fn(
             epoch, step=state.step // self.mix_every,
             mix=mix or self.topology.centralized,
+            program_alive=(
+                fr.program_alive
+                if fr is not None and not fr.program_alive.all()
+                else None
+            ),
         )
+        args = (state.params, state.opt_state, batch, jnp.float32(lr))
+        if fr is not None:
+            from repro.core.faults import realization_arrays
+
+            args = args + (realization_arrays(fr),)
         with _set_mesh(self.mesh):
-            p, o, loss, norms = fn(
-                state.params, state.opt_state, batch, jnp.float32(lr)
-            )
+            p, o, loss, norms = fn(*args)
         return TrainState(p, o, state.step + 1), loss, norms
 
     def lower_step(self, shape, *, epoch: int = 0, step: int = 0):
@@ -565,6 +707,18 @@ class SPMDTrainer:
         fn = self.step_fn(epoch, step=step)
         p_abs, o_abs = self.abstract_state
         lr = jax.ShapeDtypeStruct((), jnp.float32)
+        # a fault-model trainer's step takes the runtime-mask pytree too
+        fault_abs = ()
+        if self.fault_model is not None and self.g > 1:
+            fault_abs = ({
+                "update": jax.ShapeDtypeStruct((self.g,), jnp.float32),
+                "alive": jax.ShapeDtypeStruct((self.g,), jnp.float32),
+                "link": (
+                    jax.ShapeDtypeStruct((self.g, self.g), jnp.float32)
+                    if self.fault_model.has_link_faults
+                    else None
+                ),
+            },)
         with _set_mesh(self.mesh):
             if self.g == 1:
                 lowered = jax.jit(
@@ -588,7 +742,7 @@ class SPMDTrainer:
                     ),
                 ).lower(p_abs, o_abs, batch, lr)
             else:
-                lowered = fn.lower(p_abs, o_abs, batch, lr)
+                lowered = fn.lower(p_abs, o_abs, batch, lr, *fault_abs)
         return lowered
 
 
@@ -610,9 +764,29 @@ def main() -> None:
     ap.add_argument("--mix-rounds", type=int, default=1,
                     help="fuse H consecutive schedule steps per gossip round "
                          "into one executable (GossipProgram.fuse)")
+    ap.add_argument("--hub-balance", action="store_true",
+                    help="with --mix-rounds H > 1 on a static multi-matching "
+                         "program, rotate the edge-colored matchings across "
+                         "the H rounds so hot vertices (star hub) stop "
+                         "sending in every round")
     ap.add_argument("--fused-apply", action="store_true",
                     help="run optimizer+gossip as one fused Pallas pass for "
                          "all-PPermute programs (plain momentum-SGD only)")
+    ap.add_argument("--fault-model", default="none",
+                    choices=["none", "crash", "dropout", "link", "straggler"],
+                    help="seeded fault injection: permanent single-node "
+                         "crash, transient node dropout, Bernoulli link "
+                         "failure, or stragglers that skip the local update "
+                         "but still mix (core/faults.py)")
+    ap.add_argument("--fault-rate", type=float, default=0.1,
+                    help="per-step fault probability (crash: geometric onset)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="fault realization seed (step-deterministic; both "
+                         "engines draw identical realizations)")
+    ap.add_argument("--fault-down-steps", type=int, default=None,
+                    help="crash only: steps until the victim rejoins by "
+                         "adopting its neighbors' average (elastic "
+                         "membership; default: never)")
     ap.add_argument("--k-floor", default="2",
                     help="Ada decay floor: an int, or 'one_peer' for the "
                          "time-varying one-peer exponential family")
@@ -665,15 +839,23 @@ def main() -> None:
             raise SystemExit(
                 f"--k-floor must be an integer or 'one_peer', got {args.k_floor!r}"
             )
+    from repro.core.faults import make_fault_model
+
+    fault_model = make_fault_model(
+        args.fault_model, g, rate=args.fault_rate, seed=args.fault_seed,
+        down_steps=args.fault_down_steps,
+    )
     topo = make_topology(
         args.topology, g, k_floor=k_floor,
         consensus_target=args.consensus_target,
         consensus_probe_every=args.consensus_every,
+        fault_model=fault_model,
     )
     trainer = SPMDTrainer(
         cfg, mesh, topo, get_optimizer(args.optimizer), collect_norms=True,
         mixing=args.mixing, mix_every=args.mix_every,
-        mix_rounds=args.mix_rounds, fused_apply=args.fused_apply, donate=False,
+        mix_rounds=args.mix_rounds, hub_balance=args.hub_balance,
+        fused_apply=args.fused_apply, donate=False,
     )
     # report the apply path the step will ACTUALLY take: fused_apply falls
     # back to the interpreter for non-PPermute programs (complete, dense)

@@ -1,0 +1,104 @@
+"""Subprocess body for test_spmd.py: fault injection on both engines.
+
+Runs the SAME seeded fault stream — transient dropout, then a permanent
+crash with elastic rejoin — through (a) the production SPMD trainer and
+(b) the vmap/dense-matrix simulator with identical init/data, and checks:
+
+  * both engines draw identical fault realizations from the shared seeded
+    model (no cross-engine channel needed),
+  * final parameters agree to float32 round-off — the fault-aware step
+    (masked mixing + gated updates + degraded programs + rejoin) is
+    engine-equivalent,
+  * the trainer compiles nothing beyond its pre-enumerated program set
+    (base + single-node-out degrades), and a transient run's executable
+    count equals the fault-free count.
+"""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ["JAX_PLATFORMS"] = "cpu"
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.dsgd import make_topology
+from repro.core.faults import make_fault_model
+from repro.core.simulator import DecentralizedSimulator
+from repro.data import SyntheticLM
+from repro.launch.mesh import make_mesh
+from repro.launch.train import SPMDTrainer
+from repro.models import transformer as tfm
+from repro.optim.sgd import sgd
+
+STEPS = 8
+G = 4  # gossip nodes (data axis), model axis = 2
+
+cfg = dataclasses.replace(
+    get_config("granite-8b-reduced"), name="granite-8b", dtype=jnp.float32,
+    remat=False,
+)
+mesh = make_mesh((G, 2), ("data", "model"))
+opt = sgd(momentum=0.9)
+src = SyntheticLM(vocab=cfg.vocab, seq_len=16, seed=0)
+key = jax.random.PRNGKey(42)
+
+maxdiff = 0.0
+for kind, kw in [
+    ("dropout", dict(rate=0.35, seed=3)),
+    ("crash", dict(rate=0.8, seed=1, down_steps=3)),
+]:
+    # --- SPMD engine -------------------------------------------------------
+    fm = make_fault_model(kind, G, **kw)
+    topo_spmd = make_topology("d_ring", G, fault_model=fm)
+    trainer = SPMDTrainer(cfg, mesh, topo_spmd, opt, donate=False)
+    allowed = {p.cache_key for p in trainer.precompile_programs()}
+    state = trainer.init_state(key)
+    for t in range(STEPS):
+        batch = {k: jnp.asarray(v) for k, v in src.stacked(G, t, 2).items()}
+        state, loss, _ = trainer.train_step(state, batch, 0.05, epoch=0)
+    used = {k[0] for k in trainer._step_cache if isinstance(k, tuple)}
+    assert used <= allowed, f"{kind}: executables beyond the set: {used - allowed}"
+    if kind == "dropout":
+        base = SPMDTrainer(
+            cfg, mesh, make_topology("d_ring", G), opt, donate=False
+        )
+        b_state = base.init_state(key)
+        for t in range(2):
+            batch = {k: jnp.asarray(v) for k, v in src.stacked(G, t, 2).items()}
+            b_state, *_ = base.train_step(b_state, batch, 0.05, epoch=0)
+        assert len(trainer._step_cache) == len(base._step_cache), (
+            trainer._step_cache.keys(), base._step_cache.keys(),
+        )
+
+    # --- simulator oracle --------------------------------------------------
+    fm_sim = make_fault_model(kind, G, **kw)
+    for t in range(STEPS):  # identical realization stream, engine-free
+        fa, fb = fm.at(t), fm_sim.at(t)
+        assert (fa.alive == fb.alive).all() and (fa.update == fb.update).all()
+    topo_sim = make_topology("d_ring", G, fault_model=fm_sim)
+    sim = DecentralizedSimulator(
+        lambda p, b: tfm.loss_fn(p, cfg, b), opt, topo_sim, mixing="dense"
+    )
+    sim_state = sim.init(tfm.init_model(cfg, key, tp_size=2))
+    for t in range(STEPS):
+        batch = {k: jnp.asarray(v) for k, v in src.stacked(G, t, 2).items()}
+        sim_state, loss, _ = sim.train_step(sim_state, batch, 0.05, epoch=0)
+
+    pd = jax.tree.map(
+        lambda a, b: float(jnp.abs(a - b).max()),
+        jax.device_get(state.params), jax.device_get(sim_state.params),
+    )
+    diff = max(jax.tree.leaves(pd))
+    maxdiff = max(maxdiff, diff)
+    print(f"{kind}: diff={diff:.3e} executables={len(used)}/{len(allowed)}")
+
+print(f"MAXDIFF={maxdiff:.3e}")
+if maxdiff < 5e-5:
+    print("FAULTS_EQUIV_OK")
+else:
+    sys.exit(1)

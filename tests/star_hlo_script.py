@@ -84,4 +84,39 @@ np.testing.assert_allclose(np.asarray(got_p), want_p, atol=1e-5)
 np.testing.assert_allclose(np.asarray(got_m), m_new, atol=1e-6)
 assert_no_all_gather(ff, jnp.asarray(theta), jnp.asarray(grads), jnp.asarray(mom))
 print("fused_apply_shard == dense oracle, no all-gather")
+
+# --- fault rows inside shard_map == masked update + degraded dense mix ------
+from repro.core.schedule import degraded_matrix
+
+update = np.array([1, 1, 0, 1, 1, 1, 1, 0], bool)
+alive = np.array([1, 0, 1, 1, 1, 1, 1, 1], bool)
+fault = {
+    "update": jnp.asarray(update, jnp.float32),
+    "alive": jnp.asarray(alive, jnp.float32),
+    "link": None,
+}
+
+
+def node_fused_faulty(t, g, m):
+    new_p, new_m = fused_apply_shard(
+        prog, {"w": t}, {"w": g}, {"w": m}, "gossip", lr=lr, beta=beta,
+        fault=fault, block=32,
+    )
+    return new_p["w"], new_m["w"]
+
+
+fff = jax.jit(
+    compat.shard_map(
+        node_fused_faulty, mesh=mesh,
+        in_specs=(P("gossip"), P("gossip"), P("gossip")),
+        out_specs=(P("gossip"), P("gossip")),
+    )
+)
+got_p, got_m = fff(jnp.asarray(theta), jnp.asarray(grads), jnp.asarray(mom))
+m_want = np.where(update[:, None], beta * mom + grads, mom)
+theta_star = np.where(update[:, None], theta - lr * m_want, theta)
+want_p = degraded_matrix(prog.matrix(), alive) @ theta_star
+np.testing.assert_allclose(np.asarray(got_p), want_p, atol=1e-5)
+np.testing.assert_allclose(np.asarray(got_m), m_want, atol=1e-6)
+print("fused_apply_shard fault rows == masked oracle")
 print("STAR_HLO_OK")

@@ -1,0 +1,90 @@
+"""Schema pin for the committed BENCH_step_time.json perf artifact.
+
+Benchmark sections were drifting silently: a suite could rename or drop a
+key and the cross-PR perf trajectory would quietly stop being comparable.
+This test pins the section layout — which sections exist, how their keys
+are shaped, and which fields every entry must carry — so any drift fails
+loudly here and forces a deliberate schema bump.
+"""
+import json
+import os
+import re
+
+import pytest
+
+BENCH = os.path.join(os.path.dirname(__file__), "..", "BENCH_step_time.json")
+
+# section -> (key regex, required fields per entry)
+SCHEMA = {
+    "step_time": (
+        r"^(circulant|matching|edge_colored|gather)/n\d+/p\d+$|^fusion/one_peer$",
+        (),  # two entry shapes; field checks below are shape-specific
+    ),
+    "comm_cost": (
+        r"^star/n\d+$",
+        ("edge_colored_bytes_per_node", "edge_colored_max_node_bytes",
+         "edge_colored_permutes", "gather_bytes_per_node"),
+    ),
+    "ada": (
+        r"^(c_complete|d_torus|d_ring|d_ada_fixed|d_ada_closed)/n\d+$",
+        ("acc_mean", "acc_std", "comm_bytes_per_node", "us_per_step_mean",
+         "steps", "seeds"),
+    ),
+    "faults": (
+        r"^(d_ring|d_star|d_one_peer_exp)/(none|dropout|link|straggler|crash)"
+        r"[\d.]*/n\d+$",
+        ("acc", "xi_trace", "us_per_step", "comm_bytes_per_node", "steps",
+         "fault_model", "rate"),
+    ),
+}
+
+MIXING_FIELDS = ("best_us", "median_us", "p90_us", "bytes_per_node",
+                 "max_node_bytes", "n_collectives")
+FUSION_FIELDS = ("period", "separate", "fused", "dispatch_reduction")
+
+
+@pytest.fixture(scope="module")
+def bench():
+    assert os.path.exists(BENCH), "committed BENCH_step_time.json is missing"
+    with open(BENCH) as f:
+        return json.load(f)
+
+
+def test_all_pinned_sections_present(bench):
+    missing = set(SCHEMA) - set(bench)
+    assert not missing, f"BENCH_step_time.json lost sections: {sorted(missing)}"
+
+
+@pytest.mark.parametrize("section", sorted(SCHEMA))
+def test_section_key_and_field_layout(bench, section):
+    key_re, fields = SCHEMA[section]
+    entries = bench.get(section)
+    assert isinstance(entries, dict) and entries, section
+    for key, entry in entries.items():
+        assert re.match(key_re, key), (
+            f"{section} key {key!r} does not match the pinned layout "
+            f"{key_re!r} — update tests/test_bench_schema.py deliberately "
+            "if the schema changed"
+        )
+        assert isinstance(entry, dict), (section, key)
+        want = fields
+        if section == "step_time":
+            want = FUSION_FIELDS if key.startswith("fusion/") else MIXING_FIELDS
+        missing = set(want) - set(entry)
+        assert not missing, f"{section}/{key} lost fields {sorted(missing)}"
+
+
+def test_faults_section_covers_three_topology_classes(bench):
+    """PR acceptance: accuracy + Ξ trajectory vs fault rate for >= 3
+    topology classes (circulant, edge-colored, time-varying)."""
+    topos = {k.split("/")[0] for k in bench["faults"]}
+    assert {"d_ring", "d_star", "d_one_peer_exp"} <= topos
+    rates = {
+        (k.split("/")[0], v["rate"]) for k, v in bench["faults"].items()
+    }
+    for topo in ("d_ring", "d_star", "d_one_peer_exp"):
+        assert len([r for t, r in rates if t == topo]) >= 3, topo
+    for v in bench["faults"].values():
+        assert isinstance(v["xi_trace"], list) and v["xi_trace"]
+        step, xi = v["xi_trace"][-1]
+        assert step >= 0 and xi >= 0.0

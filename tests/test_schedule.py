@@ -466,6 +466,82 @@ def test_simulator_mix_rounds_single_executable():
 
 
 # ---------------------------------------------------------------------------
+# Hub-balanced round scheduling (ROADMAP open item)
+# ---------------------------------------------------------------------------
+
+def test_hub_balanced_rounds_pins_star_peak_send_bytes():
+    """Regression (per-step peak send volume, star n=16): the plain star
+    program makes the hub send Δ·P every step; hub-balanced H=4 rotation
+    caps every step at ⌈Δ/H⌉·P while covering each matching exactly once
+    per cycle."""
+    from repro.core.schedule import (
+        FusedProgram, hub_balanced_rounds, program_max_node_bytes,
+    )
+
+    P = 4096
+    prog = compile_graph(Star(16))  # Δ = 15 matchings
+    assert program_max_node_bytes(prog, P) == 15 * P
+    hb = hub_balanced_rounds(prog, 4)
+    assert isinstance(hb, FusedProgram) and len(hb.stages) == 4
+    peaks = [program_max_node_bytes(s, P) for s in hb.stages]
+    assert max(peaks) == 4 * P  # ceil(15/4) matchings per step
+    # every matching runs exactly once per cycle
+    assert sorted(op.perm for s in hb.stages for op in s.ops) == sorted(
+        op.perm for op in prog.ops
+    )
+    # every stage is symmetric + doubly stochastic (valid gossip step)
+    for s in hb.stages:
+        w = s.matrix()
+        np.testing.assert_allclose(w, w.T, atol=1e-12)
+        np.testing.assert_allclose(w.sum(axis=1), 1.0, atol=1e-12)
+        assert (w >= -1e-12).all()
+
+
+def test_hub_balanced_rounds_preserves_mean_and_contracts():
+    from repro.core.schedule import hub_balanced_rounds
+
+    prog = compile_graph(Star(16))
+    hb = hub_balanced_rounds(prog, 4)
+    x = np.random.default_rng(0).normal(size=(16, 3)).astype(np.float32)
+    y = jnp.asarray(x)
+    spread0 = float(jnp.abs(y - y.mean(0)).max())
+    for _ in range(20):
+        y = hb.apply_stacked(y)
+    np.testing.assert_allclose(np.asarray(y).mean(0), x.mean(0), atol=1e-4)
+    assert float(jnp.abs(y - y.mean(0)).max()) < 0.5 * spread0
+
+
+def test_hub_balanced_rounds_passthrough_and_validation():
+    from repro.core.schedule import hub_balanced_rounds
+
+    star = compile_graph(Star(8))
+    assert hub_balanced_rounds(star, 1) is star
+    one_op = compile_graph(one_peer_exponential(8, 0))
+    assert hub_balanced_rounds(one_op, 4) is one_op  # nothing to rotate
+    with pytest.raises(ValueError, match="PPermute"):
+        hub_balanced_rounds(dense_program(Star(8)), 2)
+    # rounds > matchings: surplus stages are pure self-steps, cycle intact
+    hb = hub_balanced_rounds(compile_graph(Ring(8)), 4)
+    assert len(hb.stages) == 4
+    assert sum(len(s.ops) for s in hb.stages) == 2
+
+
+def test_topology_fused_program_hub_balance_static_only():
+    """hub_balance reschedules static multi-matching programs; time-varying
+    families (one-peer) keep their own rotation untouched."""
+    star_topo = make_topology("d_star", 16)
+    p = one_peer_period(16)
+    hb = star_topo.fused_program_at(step=0, rounds=4, hub_balance=True)
+    from repro.core.schedule import program_max_node_bytes
+
+    assert max(program_max_node_bytes(s, 100) for s in hb.stages) == 400
+    op_topo = make_topology("d_one_peer_exp", 16)
+    fused = op_topo.fused_program_at(step=0, rounds=p, hub_balance=True)
+    plain = op_topo.fused_program_at(step=0, rounds=p)
+    assert fused.cache_key == plain.cache_key
+
+
+# ---------------------------------------------------------------------------
 # Permute tables (the fused-kernel view of a program)
 # ---------------------------------------------------------------------------
 

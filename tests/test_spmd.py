@@ -38,6 +38,18 @@ def test_star_lowers_to_permutes_only():
 
 
 @pytest.mark.slow
+def test_fault_injection_matches_simulator():
+    """Resilience subsystem: both engines draw the SAME seeded fault
+    realizations (transient dropout; permanent crash + elastic rejoin),
+    agree on final parameters to float32 round-off, compile nothing beyond
+    the pre-enumerated program set, and a transient-fault run's executable
+    count equals the fault-free run's."""
+    out = _run("faults_spmd_script.py", timeout=900)
+    assert "FAULTS_EQUIV_OK" in out
+    assert _extract(out, "MAXDIFF") < 5e-5
+
+
+@pytest.mark.slow
 def test_closed_loop_ada_matches_simulator():
     """Consensus-distance-triggered Ada (8 steps): both engines feed the
     controller the same measured signal, pick the SAME graph sequence
