@@ -21,6 +21,13 @@ degraded-program path end to end.  Everything lands in the committed
 ``BENCH_step_time.json`` ``faults`` section (`save_bench_section`), keyed
 ``<topo>/<model><rate>/n<nodes>``.
 
+``run_elastic`` (the ``elastic`` section, keyed the same way) stresses the
+membership dynamics instead: k>=2 CONCURRENT crashes composed over runtime
+masks (the executables column pins the zero-recompile invariant), a planned
+preemption DRAIN against an unannounced hard crash, a true mid-run JOIN
+growing membership past the initial n, and an n=512 time-varying one-peer
+dropout sweep on virtual-node shards (``shard_nodes=True``).
+
 Quick tier:  PYTHONPATH=src:. python -m benchmarks.run --quick --only faults
 """
 from __future__ import annotations
@@ -98,6 +105,56 @@ def _run_one(topo_name: str, fault_kind: str, rate: float, steps: int,
     }
 
 
+def _run_elastic_one(topo_name: str, fault_kind: str, steps: int, params0, *,
+                     n: int = N, fkw=None, mixing: str = "dense",
+                     shard_nodes: bool = False, seed: int = 0):
+    """One elastic-membership run; like ``_run_one`` but takes the fault
+    model's kwargs verbatim (k, drain_steps, join_steps, ...), sizes each
+    batch by the CURRENT membership (joins grow it mid-run), and skips comm
+    billing (``_total_comm`` replays a fixed-n realization stream, which an
+    elastic run outgrows)."""
+    fkw = dict(fkw or {})
+    fm = make_fault_model(fault_kind, n, seed=seed, **fkw)
+    topo = make_topology(topo_name, n, fault_model=fm)
+    sim = DecentralizedSimulator(
+        mini_resnet_loss, sgd(momentum=0.9), topo, mixing=mixing,
+        shard_nodes=shard_nodes, collect_norms=False,
+    )
+    state = sim.init(params0)
+    key = jax.random.PRNGKey(seed)
+    elastic = fm is not None and fm.elastic
+    xi_trace, step_us = [], []
+    for t in range(steps):
+        key, sub = jax.random.split(key)
+        nb = fm.n_at(t) if elastic else n
+        batch = _batch_fn(sub, t, nb)
+        t0 = time.perf_counter()
+        state, loss, _ = sim.train_step(
+            state, batch, 0.1, epoch=t // STEPS_PER_EPOCH
+        )
+        jax.block_until_ready(loss)
+        step_us.append(1e6 * (time.perf_counter() - t0))
+        if t % PROBE_EVERY == 0:
+            alive = fm.at(t).alive if fm is not None else np.ones(sim.n, bool)
+            # float drain boosts are still alive; Xi is over membership
+            mask = jnp.asarray(np.asarray(alive) != 0, jnp.float32)
+            xi_trace.append([t, float(
+                consensus_distance_masked_jit(state.params, mask)
+            )])
+    acc = float(_eval_fn(state.mean_params()))
+    return {
+        "acc": acc,
+        "xi_trace": xi_trace,
+        "us_per_step": float(np.median(step_us)),
+        "steps": steps,
+        "fault_model": fault_kind if fm is not None else "none",
+        # the elastic acceptance bar in artifact form: composed concurrent
+        # crashes must not grow this beyond the fault-free count
+        "executables": len(sim._step_cache),
+        "n_final": sim.n,
+    }
+
+
 def run(steps: int = 120, quick: bool = False) -> list[Row]:
     if quick:  # 2-CPU box tier
         steps = min(steps, 20)
@@ -131,4 +188,62 @@ def run(steps: int = 120, quick: bool = False) -> list[Row]:
         )
     save_json("faults", payload)
     save_bench_section("faults", payload)
+    return rows
+
+
+def run_elastic(steps: int = 120, quick: bool = False) -> list[Row]:
+    """Elastic-membership sweep (the ``elastic`` section): concurrent-crash
+    count x drain-vs-hard-crash x a true mid-run join, plus an n=512
+    one-peer dropout sweep on virtual-node shards.
+
+    Quick tier:  PYTHONPATH=src:. python -m benchmarks.run --quick --only elastic
+    """
+    if quick:
+        steps = min(steps, 20)
+    steps512 = 6 if quick else max(steps // 5, 10)
+    params0 = init_params(mini_resnet_defs(), jax.random.PRNGKey(0))
+    payload = {}
+    # concurrent-crash count: k simultaneous failures composed over runtime
+    # masks — the executables column must match the fault-free count
+    for k in (2, 3):
+        payload[f"d_ring/concurrent{k}/n{N}"] = _run_elastic_one(
+            "d_ring", "concurrent", steps, params0,
+            fkw=dict(rate=0.8, k=k, down_steps=max(steps // 4, 2)), seed=2,
+        )
+    # planned drain-then-leave vs an unannounced hard crash that never
+    # rejoins: the drain's boosted gossip + exact handoff should show up as
+    # a smaller Xi excursion and better averaged-model accuracy
+    payload[f"d_ring/preempt/n{N}"] = _run_elastic_one(
+        "d_ring", "preempt", steps, params0,
+        fkw=dict(rate=0.8, drain_steps=5), seed=1,
+    )
+    payload[f"d_ring/crash/n{N}"] = _run_elastic_one(
+        "d_ring", "crash", steps, params0,
+        fkw=dict(rate=0.8, down_steps=steps), seed=1,
+    )
+    # true join: membership grows past the initial n mid-run
+    payload[f"d_ring/join/n{N}"] = _run_elastic_one(
+        "d_ring", "join", steps, params0,
+        fkw=dict(join_steps=(max(steps // 2, 1),)), seed=0,
+    )
+    # n=512 time-varying one-peer under transient dropout, node axis
+    # sharded over the host's devices (the scale the 2-CPU box can't hold
+    # unsharded); "shift" engine so mixing stays a stacked roll, not a
+    # 512x512 dense product
+    for rate in (0.1, 0.3):
+        payload[f"d_one_peer_exp/dropout{rate}/n512"] = _run_elastic_one(
+            "d_one_peer_exp", "dropout", steps512, params0, n=512,
+            fkw=dict(rate=rate), mixing="shift", shard_nodes=True, seed=3,
+        )
+    rows = [
+        Row(
+            f"elastic/{key}",
+            res["us_per_step"],
+            f"acc={res['acc']:.3f} xi_final={res['xi_trace'][-1][1]:.3g}"
+            f" exec={res['executables']} n_final={res['n_final']}",
+        )
+        for key, res in payload.items()
+    ]
+    save_json("elastic", payload)
+    save_bench_section("elastic", payload)
     return rows

@@ -8,6 +8,8 @@ land in benchmarks/results/ and feed EXPERIMENTS.md.
   ada              Fig 7     Ada vs static graphs (+ comm volume)
   comm_cost        Table 1   per-graph communication model
   faults           —         resilience: fault rate × topology class
+  elastic          —         elastic membership: concurrent crashes, drains,
+                             joins, n=512 virtual-node shards
   lr_scaling       §3.2      linear vs sqrt LR scaling rescue
   step_time        —         mixing-implementation microbench
 
@@ -54,6 +56,10 @@ def main() -> None:
             quick=args.quick,
         ),
         "faults": lambda: faults.run(
+            steps=20 if args.quick else (40 if args.fast else 120),
+            quick=args.quick,
+        ),
+        "elastic": lambda: faults.run_elastic(
             steps=20 if args.quick else (40 if args.fast else 120),
             quick=args.quick,
         ),

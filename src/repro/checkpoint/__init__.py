@@ -1,1 +1,3 @@
-from repro.checkpoint.ckpt import save_checkpoint, load_checkpoint, latest_step
+from repro.checkpoint.ckpt import (
+    save_checkpoint, load_checkpoint, load_checkpoint_extra, latest_step,
+)

@@ -17,9 +17,16 @@ import numpy as np
 
 PyTree = Any
 
-__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]
+__all__ = [
+    "save_checkpoint", "load_checkpoint", "load_checkpoint_extra",
+    "latest_step",
+]
 
 _SEP = "/"
+# sidecar npz key for the JSON "extra" payload (engine run state beyond the
+# array tree: controller phase/rung/logs, membership tracking) — chosen so
+# it can never collide with a flattened tree path (those never start with _)
+_EXTRA_KEY = "__extra__"
 
 
 def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
@@ -40,11 +47,24 @@ def _part(p) -> str:
     return str(p)
 
 
-def save_checkpoint(directory: str, step: int, state: PyTree, *, keep: int = 3) -> str:
-    """Write ``<dir>/step_<n>.npz`` (+ manifest); prune to ``keep`` newest."""
+def save_checkpoint(
+    directory: str, step: int, state: PyTree, *, keep: int = 3,
+    extra: dict | None = None,
+) -> str:
+    """Write ``<dir>/step_<n>.npz`` (+ manifest); prune to ``keep`` newest.
+
+    ``extra``: optional JSON-serializable dict rides in the same npz (one
+    atomic artifact) under a reserved key — crash-consistent resume needs
+    the engine run state (``snapshot_extra``) saved with the arrays it
+    belongs to, never in a second file that could be torn from them.
+    """
     os.makedirs(directory, exist_ok=True)
     path = os.path.join(directory, f"step_{step:010d}.npz")
     flat = _flatten(state)
+    if _EXTRA_KEY in flat:
+        raise ValueError(f"state tree uses the reserved key {_EXTRA_KEY!r}")
+    if extra is not None:
+        flat[_EXTRA_KEY] = np.asarray(json.dumps(extra))
     np.savez(path, **flat)
     with open(os.path.join(directory, "manifest.json"), "w") as f:
         json.dump({"latest_step": step}, f)
@@ -81,3 +101,15 @@ def load_checkpoint(directory: str, template: PyTree, step: int | None = None) -
             )
         leaves.append(arr)
     return jax.tree_util.tree_unflatten(treedef, leaves), step
+
+
+def load_checkpoint_extra(directory: str, step: int | None = None) -> dict | None:
+    """The ``extra`` payload saved with a checkpoint (None if it has none)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint manifest in {directory}")
+    data = np.load(os.path.join(directory, f"step_{step:010d}.npz"))
+    if _EXTRA_KEY not in data:
+        return None
+    return json.loads(str(data[_EXTRA_KEY]))

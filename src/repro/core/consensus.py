@@ -303,9 +303,57 @@ class ConsensusController:
         rung and restarts the phase reference: the next probes re-seed and
         peak-track Ξ_0 on the degraded membership, so the trigger compares
         like with like.  Recorded in ``events`` for replay/diagnostics.
+
+        Simultaneous membership events in ONE step — a k-node concurrent
+        crash, a departure landing on a join — coalesce into a single
+        re-arm and a single log entry: re-arming is idempotent within a
+        step (Ξ_0 is already cleared), and k duplicate entries would make
+        the event log overstate distinct membership phases k-fold.
+        Distinct same-step reasons merge into one ``"a+b"`` entry.
         """
+        step = int(step)
         self.xi0 = None
-        self.events.append((int(step), str(reason)))
+        if self.events and self.events[-1][0] == step:
+            prev = self.events[-1][1]
+            if str(reason) not in prev.split("+"):
+                self.events[-1] = (step, f"{prev}+{reason}")
+            return
+        self.events.append((step, str(reason)))
+
+    # -- resume / adoption ----------------------------------------------------
+    def state_dict(self) -> dict:
+        """JSON-serializable run state (for crash-consistent resume)."""
+        return {
+            "xi0": self.xi0,
+            "rung": int(self.rung),
+            "transitions": [[int(s), int(r)] for s, r in self.transitions],
+            "trace": [[int(s), float(x), int(r)] for s, x, r in self.trace],
+            "events": [[int(s), str(r)] for s, r in self.events],
+        }
+
+    def load_state_dict(self, d: dict) -> None:
+        """Restore ``state_dict`` output — resumed runs continue the same
+        phase reference, rung walk, and logs as the uninterrupted run."""
+        self.xi0 = None if d.get("xi0") is None else float(d["xi0"])
+        self.rung = min(int(d["rung"]), len(self._ladder) - 1)
+        self.transitions[:] = [(int(s), int(r)) for s, r in d["transitions"]]
+        self.trace[:] = [
+            (int(s), float(x), int(r)) for s, x, r in d["trace"]
+        ]
+        self.events[:] = [(int(s), str(r)) for s, r in d["events"]]
+
+    def adopt(self, other: "ConsensusController") -> None:
+        """Continue another controller's run state on THIS ladder.
+
+        Used at an elastic join: the topology re-derives its graph family
+        at the new n, which rebuilds the controller with a new ladder; the
+        fresh instance adopts the old run state (rung clamped to the new
+        ladder, history carried over) so the schedule position and logs
+        survive the membership change.  The caller's next
+        ``track_membership`` re-arms the phase reference for the grown
+        population.
+        """
+        self.load_state_dict(other.state_dict())
 
     def reset(self) -> None:
         """Re-arm for a fresh run (clears Ξ_0, rung, and the trace)."""

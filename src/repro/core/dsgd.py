@@ -140,6 +140,10 @@ class Topology:
     controller: Optional[ConsensusController] = None
     fault_model: Optional[FaultModel] = None
     mix_order: str = "post"  # "post" | "pre"
+    # (name, kwargs) recipe recorded by make_topology so the SAME family can
+    # be re-derived at a different n (elastic joins); excluded from equality
+    # because it duplicates the constructed fields.
+    spec: Any = dataclasses.field(default=None, compare=False)
 
     def graph_at(self, epoch: int = 0, step: int = 0) -> Optional[CommGraph]:
         """The parameter-mixing graph in force; None => centralized.
@@ -254,7 +258,51 @@ class Topology:
                 [p for _, p in out], self.fault_model
             ):
                 out.append((key_of[base_p.cache_key], deg))
+            if self.fault_model.elastic:
+                # pre-declared growth schedule: fold in the family at every
+                # size the joins can reach, so a mid-run join *selects* a
+                # pre-enumerated program instead of recompiling.  The
+                # resized topology drops the fault model (its masks are
+                # sized for the initial n; elastic models realize all-ones
+                # membership at grown sizes anyway) to avoid re-entering
+                # this fold per size.
+                for m in self.fault_model.membership_sizes():
+                    if m == self.n_nodes:
+                        continue
+                    grown = dataclasses.replace(
+                        self.resized(m), fault_model=None
+                    )
+                    for gk, p in grown.distinct_programs(n_epochs):
+                        if p.cache_key not in seen:
+                            seen.add(p.cache_key)
+                            out.append((gk, p))
         return out
+
+    def resized(self, n_new: int) -> "Topology":
+        """Re-derive this topology family at a different node count.
+
+        Elastic joins grow membership past the initial n; the graph family
+        (ring, one-peer exponential, Ada ladder, ...) is parameterized by n
+        throughout, so a membership change re-derives the SAME family at
+        the new size from the ``spec`` recipe ``make_topology`` recorded —
+        it does not mutate graphs in place.  The fault model is carried
+        over (elastic models are size-aware); the controller is rebuilt for
+        the new n and should ``adopt`` the old one's run state.
+        """
+        if self.spec is None:
+            raise ValueError(
+                "topology has no spec recipe (hand-constructed?); build via "
+                "make_topology to support elastic resizing"
+            )
+        name, kwargs = self.spec
+        if name == "d_custom":
+            raise ValueError(
+                "d_custom has no size-parameterized family to re-derive; "
+                "elastic membership needs a named topology"
+            )
+        return make_topology(
+            name, int(n_new), fault_model=self.fault_model, **kwargs
+        )
 
     @property
     def adaptive(self) -> bool:
@@ -357,12 +405,22 @@ def make_topology(
     if fault_model is not None:
         if name == "c_complete":
             raise ValueError("fault injection is decentralized-only")
-        if fault_model.n != n_nodes:
+        if fault_model.n != n_nodes and not fault_model.elastic:
+            # elastic models are size-aware: a resized() topology at a
+            # grown membership keeps the original model (n = initial size)
             raise ValueError(
                 f"fault model covers {fault_model.n} nodes but n_nodes={n_nodes}"
             )
     base = dict(
-        name=name, n_nodes=n_nodes, mix_order=mix_order, fault_model=fault_model
+        name=name, n_nodes=n_nodes, mix_order=mix_order, fault_model=fault_model,
+        # the resize recipe: everything size-independent; torus_grid and
+        # adjacency are size-specific and are re-derived (or rejected) at
+        # the new n instead
+        spec=(name, dict(
+            k=k, k0=k0, gamma_k=gamma_k, k_floor=k_floor, seed=seed,
+            pool=pool, mix_order=mix_order, consensus_target=consensus_target,
+            consensus_probe_every=consensus_probe_every,
+        )),
     )
     if name == "c_complete":
         return Topology(centralized=True, **base)

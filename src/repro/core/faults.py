@@ -17,6 +17,32 @@ Fault classes (``make_fault_model``):
     (``GossipProgram.degrade``) — the *single-node-out program set* folded
     into ``Topology.distinct_programs`` — so a crash changes which cached
     executable runs, never compiles a new one mid-run.
+  * ``concurrent`` — k >= 2 seeded victims with independent geometric
+    onsets, so their down windows OVERLAP.  Default execution is *composed*:
+    the realized multi-node dead set rides entirely in the runtime alive
+    mask over the base program (``select_alive`` stays all-ones), which by
+    the mask-composition identity below realizes exactly the multi-node
+    ``degraded_matrix`` — a concurrent-crash run compiles NO more
+    executables than the fault-free run.  ``enumerate_programs=True`` is
+    the bounded fast path: the <= 2k realized membership masks along the
+    crash timeline are pre-enumerated as degraded programs, so dead-edge
+    sends actually leave the wire (still zero mid-run recompiles).
+  * ``preempt``   — planned preemption drain: a seeded victim announces
+    departure ``drain_steps`` before it leaves.  During the drain its edges
+    are *up-weighted* by ``boost`` (a float runtime mask — the masked
+    interpreters are linear in the mask, so boost > 1 moves extra mass onto
+    the draining edges and subtracts it from the receivers' self weight;
+    W stays symmetric + doubly stochastic, so the global mean is preserved
+    every drain step).  At departure the engines run the exact
+    mean-preserving handoff (``drain_handoff``) and the node leaves without
+    the Xi_t spike a hard crash causes; afterwards it is a permanent
+    single-node-out membership like ``crash``.
+  * ``join``      — true mid-run growth (simulator-only): at each
+    pre-declared (or seeded) join step membership grows by one node, which
+    enters by adopting its neighbors' average (``admit_node``).  The
+    topology re-derives its graph family at the new n
+    (``Topology.resized``); programs for every pre-declared size are
+    enumerable up front, so joins never recompile beyond that set.
   * ``dropout``   — transient node dropout: per-step i.i.d. Bernoulli(rate)
     per node.  A dropped node skips this round's gossip (its row degrades
     to identity, its neighbors renormalize onto self) but still takes its
@@ -27,6 +53,13 @@ Fault classes (``make_fault_model``):
   * ``straggler`` — per-step Bernoulli(rate) stragglers: the node skips its
     local optimizer update (gradient discarded, momentum untouched) but
     still participates in gossip — the "slow worker" regime.
+
+Mask composition (why ``concurrent`` compiles nothing new): degradation by
+an alive mask only zeroes off-diagonal entries and renormalizes onto the
+receiver's diagonal, so degrading by mask A and then runtime-masking by
+mask B realizes exactly ``degraded_matrix(W, A & B)`` — composition over
+disjoint dead sets equals direct multi-node degradation.  The property
+test in ``tests/test_elastic.py`` pins this against the dense oracle.
 
 How the masks act (shared by both engines):
 
@@ -58,15 +91,20 @@ PyTree = Any
 
 __all__ = [
     "FAULT_MODELS",
+    "ConcurrentCrash",
     "FaultModel",
     "FaultRealization",
+    "Join",
     "LinkFailure",
     "NoFaults",
     "PermanentCrash",
+    "Preemption",
     "Straggler",
     "TransientDropout",
+    "admit_node",
     "adopt_neighbor_average",
     "degraded_matrix",
+    "drain_handoff",
     "fold_degraded_programs",
     "make_fault_model",
     "realization_arrays",
@@ -79,14 +117,27 @@ __all__ = [
 class FaultRealization:
     """What the fault model says about ONE training step (numpy, host-side).
 
-    alive:         (n,) bool — node participates in this step's gossip.
+    alive:         (n,) — node participates in this step's gossip.  Usually
+        bool; float values are *weight multipliers* on the node's edges
+        (the masked interpreters are linear in the mask): 0 removes the
+        edge, 1 keeps it, and a preemption drain up-weights the departing
+        node with values > 1 — still symmetric, so W stays doubly
+        stochastic and the mean is preserved.
     update:        (n,) bool — node performs its local optimizer update.
-    program_alive: (n,) bool — the slowly-varying *membership* (all ones
-        except permanent crashes).  Engines select the degraded program by
-        this mask; the per-step ``alive``/``link_up`` ride as runtime
-        inputs so transient realizations never change the executable.
+    program_alive: (n,) bool — the slowly-varying TRUE membership (all
+        ones except permanent crashes/departures).  Drives
+        ``membership_key`` and hence controller re-arming.
+    select_alive:  optional (n,) bool — the mask used for degraded-program
+        *selection* when it differs from the true membership.  The composed
+        concurrent-crash path keeps it all-ones (base program + runtime
+        masks realize the multi-node degradation), while ``program_alive``
+        still records who is actually dead.  ``None`` => ``program_alive``.
     link_up:       optional (n, n) bool, symmetric — per-link liveness.
     rejoin:        nodes re-entering at this step (adopt neighbor average).
+    depart:        nodes leaving cleanly AT this step (after a drain): the
+        engines run the mean-preserving ``drain_handoff`` before the step.
+    joins:         new node indices entering at this step (elastic growth;
+        realization arrays from this step on are sized for the grown n).
     """
 
     alive: np.ndarray
@@ -94,18 +145,36 @@ class FaultRealization:
     program_alive: np.ndarray
     link_up: Optional[np.ndarray] = None
     rejoin: tuple[int, ...] = ()
+    select_alive: Optional[np.ndarray] = None
+    depart: tuple[int, ...] = ()
+    joins: tuple[int, ...] = ()
 
     @property
     def faulty(self) -> bool:
+        # `alive == 1` (not `.all()`): a float drain boost (alive > 1) must
+        # also route through the masked step even though every node is up
         return (
-            not self.alive.all()
+            not (self.alive == 1).all()
             or not self.update.all()
             or (self.link_up is not None and not self.link_up.all())
         )
 
     def membership_key(self) -> tuple:
-        """Hashable membership identity (drives controller re-arming)."""
+        """Hashable TRUE-membership identity (drives controller re-arming).
+
+        Always derived from ``program_alive`` — even when the composed
+        concurrent-crash path selects the base program (``select_alive``
+        all-ones), a real membership change must still re-arm the
+        controller's phase reference.
+        """
         return tuple(bool(a) for a in self.program_alive)
+
+    def selection_mask(self) -> np.ndarray:
+        """The membership mask engines select the degraded program by."""
+        return (
+            self.program_alive if self.select_alive is None
+            else self.select_alive
+        )
 
 
 def _rng(seed: int, step: int, salt: int = 0) -> np.random.Generator:
@@ -143,6 +212,12 @@ class FaultModel:
     def has_link_faults(self) -> bool:
         """Whether realizations may carry a per-edge ``link_up`` mask —
         models that never do skip the (n, n) link operand entirely."""
+        return False
+
+    @property
+    def elastic(self) -> bool:
+        """Whether membership can EXCEED the initial n (mid-run joins).
+        Elastic models are simulator-only — a device mesh is fixed."""
         return False
 
     def describe(self) -> str:
@@ -227,6 +302,253 @@ class PermanentCrash(FaultModel):
 
 
 @dataclasses.dataclass(frozen=True)
+class ConcurrentCrash(FaultModel):
+    """k >= 2 seeded victims crash in overlapping windows.
+
+    Each victim gets an independent geometric onset (parameter ``rate``),
+    so down windows overlap — including simultaneous same-step crashes
+    (the coalesced-rearm case).  ``down_steps`` brings each victim back
+    that many steps after its own onset (elastic rejoin, per victim).
+
+    Execution modes:
+
+      * composed (default): ``select_alive`` stays all-ones — the engines
+        keep the BASE program and the realized multi-node dead set rides
+        the runtime alive mask.  By the mask-composition identity this
+        realizes exactly ``degraded_matrix(W, dead-set)``, and the run
+        compiles no more executables than the fault-free run (the
+        acceptance bar pinned by ``tests/faults_spmd_script.py``).
+      * ``enumerate_programs=True``: the bounded enumeration fast path —
+        ``program_masks`` walks the crash/rejoin timeline and returns every
+        membership mask the model actually realizes (<= 2k distinct, NOT
+        the C(n, k) combinatorial set).  Engines then select the exact
+        degraded program, so dead-edge sends leave the wire; the masks are
+        pre-enumerated, so zero mid-run recompiles still holds.
+    """
+
+    name: str = "concurrent"
+    k: int = 2
+    down_steps: Optional[int] = None
+    enumerate_programs: bool = False
+
+    def __post_init__(self):
+        super().__post_init__()
+        if not 2 <= int(self.k) < self.n:
+            raise ValueError(
+                f"concurrent crash needs 2 <= k < n, got k={self.k}, n={self.n}"
+            )
+        if self.down_steps is not None and int(self.down_steps) < 1:
+            raise ValueError(f"down_steps must be >= 1, got {self.down_steps}")
+        r = _rng(self.seed, 0, salt=105)
+        victims = tuple(int(v) for v in r.choice(self.n, int(self.k), False))
+        onsets = tuple(
+            int(r.geometric(self.rate)) if self.rate > 0 else None
+            for _ in victims
+        )
+        object.__setattr__(self, "_victims", victims)
+        object.__setattr__(self, "_onsets", onsets)
+
+    @property
+    def victims(self) -> tuple[int, ...]:
+        return self._victims
+
+    @property
+    def onsets(self) -> tuple[Optional[int], ...]:
+        return self._onsets
+
+    def _window(self, i: int) -> tuple[Optional[int], Optional[int]]:
+        on = self._onsets[i]
+        if on is None:
+            return None, None
+        off = None if self.down_steps is None else on + int(self.down_steps)
+        return on, off
+
+    def at(self, step: int) -> FaultRealization:
+        ones = self._ones()
+        alive = ones.copy()
+        rejoin = []
+        for i, v in enumerate(self._victims):
+            on, off = self._window(i)
+            if on is None:
+                continue
+            if on <= step and (off is None or step < off):
+                alive[v] = False
+            elif off is not None and step == off:
+                rejoin.append(v)
+        return FaultRealization(
+            alive=alive,
+            update=alive.copy(),
+            program_alive=alive.copy(),
+            rejoin=tuple(rejoin),
+            # composed mode: base program + runtime masks (select stays
+            # all-ones); enumeration mode selects the realized membership
+            select_alive=None if self.enumerate_programs else ones.copy(),
+        )
+
+    def program_masks(self):
+        if not self.enumerate_programs:
+            return ()  # composed: the dead set rides the runtime mask
+        events = sorted(
+            {s for i in range(len(self._victims))
+             for s in self._window(i) if s is not None}
+        )
+        masks, seen = [], set()
+        for s in events:
+            mask = tuple(bool(a) for a in self.at(s).program_alive)
+            if not all(mask) and mask not in seen:
+                seen.add(mask)
+                masks.append(mask)
+        return tuple(masks)
+
+
+@dataclasses.dataclass(frozen=True)
+class Preemption(FaultModel):
+    """Planned preemption: announce, drain, hand off, leave cleanly.
+
+    A seeded victim is preempted at a seeded step (geometric onset with
+    parameter ``rate``) but — unlike a hard crash — it announces departure
+    ``drain_steps`` ahead.  During the drain its edges carry a float
+    ``boost`` > 1 in the runtime alive mask: the masked interpreters are
+    linear in the mask, so every edge touching the victim moves ``boost``×
+    its weight while receivers subtract the excess from their self weight.
+    The boosted W stays symmetric and doubly stochastic (mean preserved
+    every drain step); neighbors absorb the departing replica's state
+    faster than the base graph would diffuse it.
+
+    At the departure step the realization carries ``depart=(victim,)`` and
+    the engines apply the exact mean-preserving handoff
+    (``drain_handoff``): the survivors' post-departure mean equals the
+    pre-departure global mean, so Xi_t sees no membership spike — the
+    clean-leave contrast to ``crash`` that ``benchmarks/faults.py``'s
+    elastic sweep measures.  From then on the victim is a permanent
+    single-node-out membership (one pre-enumerated degraded program, as
+    for ``crash``).
+
+    The default ``boost=1.5`` keeps every receiver's self weight
+    nonnegative for the uniform circulant families and Metropolis–Hastings
+    leaf drains (self weight >= 0.5 × boosted incoming mass there); larger
+    boosts stay mean-preserving but may push a self weight negative.
+    """
+
+    name: str = "preempt"
+    drain_steps: int = 5
+    boost: float = 1.5
+
+    def __post_init__(self):
+        super().__post_init__()
+        if int(self.drain_steps) < 1:
+            raise ValueError(
+                f"drain_steps must be >= 1, got {self.drain_steps}"
+            )
+        if not float(self.boost) >= 1.0:
+            raise ValueError(f"boost must be >= 1, got {self.boost}")
+        r = _rng(self.seed, 0, salt=106)
+        victim = int(r.integers(self.n))
+        announce = int(r.geometric(self.rate)) if self.rate > 0 else None
+        object.__setattr__(self, "_victim", victim)
+        object.__setattr__(self, "_announce_step", announce)
+
+    @property
+    def victim(self) -> int:
+        return self._victim
+
+    @property
+    def announce_step(self) -> Optional[int]:
+        return self._announce_step
+
+    @property
+    def depart_step(self) -> Optional[int]:
+        if self._announce_step is None:
+            return None
+        return self._announce_step + int(self.drain_steps)
+
+    def at(self, step: int) -> FaultRealization:
+        ones = self._ones()
+        a, d = self._announce_step, self.depart_step
+        if a is None or step < a:
+            return FaultRealization(
+                alive=ones, update=ones.copy(), program_alive=ones.copy()
+            )
+        if step < d:  # draining: still training, edges boosted
+            boosted = np.ones(self.n, dtype=np.float64)
+            boosted[self._victim] = float(self.boost)
+            return FaultRealization(
+                alive=boosted, update=ones.copy(), program_alive=ones.copy()
+            )
+        dead = ones.copy()
+        dead[self._victim] = False
+        return FaultRealization(
+            alive=dead,
+            update=dead.copy(),
+            program_alive=dead.copy(),
+            depart=(self._victim,) if step == d else (),
+        )
+
+    def program_masks(self):
+        if self._announce_step is None:
+            return ()
+        mask = [True] * self.n
+        mask[self._victim] = False
+        return (tuple(mask),)
+
+
+@dataclasses.dataclass(frozen=True)
+class Join(FaultModel):
+    """True mid-run growth: membership exceeds the initial n (simulator-only).
+
+    ``join_steps`` pre-declares when each new node enters (one per step
+    listed; the new node's index is ``n + i`` for the i-th join).  When not
+    given, one seeded geometric onset (parameter ``rate``) is drawn — still
+    a pure function of the seed, so both a run and its resume replay the
+    same growth.  A joining node enters by adopting its (new) neighbors'
+    average (``admit_node``); the engine re-derives the topology at the new
+    n via ``Topology.resized`` and the controller re-arms through
+    ``track_membership`` (the membership key changes length).
+
+    Programs for every pre-declared size are enumerable up front
+    (``Topology.distinct_programs`` folds the growth schedule in), so joins
+    compile nothing beyond that bounded set.
+    """
+
+    name: str = "join"
+    join_steps: Optional[tuple[int, ...]] = None
+
+    def __post_init__(self):
+        super().__post_init__()
+        js = self.join_steps
+        if js is None:
+            r = _rng(self.seed, 0, salt=107)
+            js = (int(r.geometric(self.rate)),) if self.rate > 0 else ()
+        js = tuple(sorted(int(s) for s in js))
+        if js and js[0] < 1:
+            raise ValueError(f"join steps must be >= 1, got {js}")
+        object.__setattr__(self, "join_steps", js)
+
+    @property
+    def elastic(self) -> bool:
+        return True
+
+    def membership_sizes(self) -> tuple[int, ...]:
+        """Every n the run can reach (the pre-declared growth schedule)."""
+        return tuple(self.n + i for i in range(len(self.join_steps) + 1))
+
+    def n_at(self, step: int) -> int:
+        """Membership size in force AT ``step`` (joins land at their step)."""
+        return self.n + sum(1 for s in self.join_steps if s <= step)
+
+    def at(self, step: int) -> FaultRealization:
+        m = self.n_at(step)
+        ones = np.ones(m, dtype=bool)
+        joins = tuple(
+            self.n + i for i, s in enumerate(self.join_steps) if s == step
+        )
+        return FaultRealization(
+            alive=ones, update=ones.copy(), program_alive=ones.copy(),
+            joins=joins,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
 class TransientDropout(FaultModel):
     """Per-step i.i.d. node dropout: skips gossip, keeps the local update."""
 
@@ -276,7 +598,10 @@ class Straggler(FaultModel):
         )
 
 
-FAULT_MODELS = ("none", "crash", "dropout", "link", "straggler")
+FAULT_MODELS = (
+    "none", "crash", "concurrent", "preempt", "join", "dropout", "link",
+    "straggler",
+)
 
 
 def make_fault_model(
@@ -286,11 +611,22 @@ def make_fault_model(
     rate: float = 0.1,
     seed: int = 0,
     down_steps: Optional[int] = None,
+    k: int = 2,
+    drain_steps: int = 5,
+    boost: float = 1.5,
+    join_steps: Optional[tuple[int, ...]] = None,
+    enumerate_programs: bool = False,
 ) -> Optional[FaultModel]:
     """Factory: ``make_fault_model("dropout", 16, rate=0.05, seed=3)``.
 
     ``kind="none"`` (or rate 0 for transient models) returns ``None`` so
-    engines keep their exact fault-free hot path.
+    engines keep their exact fault-free hot path.  Elastic/permanent kinds:
+    ``crash`` (one victim; ``down_steps`` rejoins it), ``concurrent``
+    (``k`` victims, overlapping windows; ``enumerate_programs`` switches
+    from the composed runtime-mask default to the bounded pre-enumerated
+    degraded-program fast path), ``preempt`` (``drain_steps`` of ``boost``-
+    weighted drain, then a clean mean-preserving departure), and ``join``
+    (``join_steps`` pre-declared growth; simulator-only).
     """
     if kind in (None, "none"):
         return None
@@ -300,8 +636,24 @@ def make_fault_model(
         # keep the documented contract that engines stay on the exact
         # fault-free hot path instead of paying the mask plumbing for nothing
         return m if m.crash_step is not None else None
+    if kind == "concurrent":
+        m = ConcurrentCrash(
+            n=n, rate=rate, seed=seed, k=k, down_steps=down_steps,
+            enumerate_programs=enumerate_programs,
+        )
+        return m if any(o is not None for o in m.onsets) else None
     if down_steps is not None:
-        raise ValueError("down_steps is a crash (permanent-fault) option")
+        raise ValueError(
+            "down_steps is a crash/concurrent (permanent-fault) option"
+        )
+    if kind == "preempt":
+        m = Preemption(
+            n=n, rate=rate, seed=seed, drain_steps=drain_steps, boost=boost,
+        )
+        return m if m.announce_step is not None else None
+    if kind == "join":
+        m = Join(n=n, rate=rate, seed=seed, join_steps=join_steps)
+        return m if m.join_steps else None
     if rate == 0.0:
         return None
     if kind == "dropout":
@@ -358,11 +710,14 @@ def track_membership(last, fr: FaultRealization, controller, step: int):
     Returns the new membership key; on a change after the first step it
     re-arms the consensus controller's phase reference (a crash/rejoin
     spikes Ξ — comparing it against the pre-fault peak would ratchet the
-    ladder on a stale reference).  Shared by both engines.
+    ladder on a stale reference).  Shared by both engines.  This is the
+    single per-step re-arm entry point: a k-node concurrent crash changes
+    the key ONCE, and ``ConsensusController.rearm`` coalesces any further
+    same-step events into one log entry.
     """
     membership = fr.membership_key()
     if membership != last and last is not None and controller is not None:
-        controller.rearm(step)
+        controller.rearm(step, reason="membership")
     return membership
 
 
@@ -388,6 +743,65 @@ def adopt_neighbor_average(stacked: PyTree, node: int, neighbors) -> PyTree:
         return x.at[node].set(mean)
 
     return jax.tree.map(_adopt, stacked)
+
+
+def drain_handoff(stacked: PyTree, node: int, neighbors, alive) -> PyTree:
+    """Exact mean-preserving handoff at a drained node's departure step.
+
+    With ``n_surv`` survivors and ``m`` neighbors of the departing node
+    each neighbor receives
+
+        Δ = n_surv · (θ_d − x̄_surv) / (m · (n_surv + 1))
+
+    so the survivors' post-departure mean equals the pre-departure global
+    mean ``(n_surv · x̄_surv + θ_d) / (n_surv + 1)`` exactly — the departing
+    replica's information is handed to its neighborhood instead of being
+    dropped, and Ξ_t over the survivors sees no membership discontinuity.
+    Shared by both engines (like ``adopt_neighbor_average``); with no
+    surviving neighbor the state is returned unchanged (the information is
+    unreachable, as for a hard crash of an isolated node).
+    """
+    nbrs = [int(i) for i in neighbors]
+    surv = np.asarray(alive) != 0
+    surv = surv.copy()
+    surv[node] = False
+    n_surv = int(surv.sum())
+    if not nbrs or n_surv == 0:
+        return stacked
+    sidx = jnp.asarray(np.nonzero(surv)[0])
+    nidx = jnp.asarray(nbrs)
+    m = len(nbrs)
+
+    def _hand(x):
+        xf = x.astype(jnp.float32)
+        mean_surv = jnp.mean(jnp.take(xf, sidx, axis=0), axis=0)
+        delta = (n_surv * (xf[node] - mean_surv)) / (m * (n_surv + 1))
+        return x.at[nidx].add(delta[None].astype(x.dtype))
+
+    return jax.tree.map(_hand, stacked)
+
+
+def admit_node(stacked: PyTree, neighbors) -> PyTree:
+    """Elastic growth: append one new node row = its neighbors' average.
+
+    The mid-run-join analogue of ``adopt_neighbor_average``: every leaf of
+    ``stacked`` grows its leading node axis by one, seeded with the mean of
+    ``neighbors`` (the joining node's neighborhood in the RESIZED graph) —
+    or the global mean when the neighbor list is empty.  Joins are rare
+    membership events, executed eagerly outside the step cache.
+    """
+    nbrs = [int(i) for i in neighbors]
+
+    def _grow(x):
+        xf = x.astype(jnp.float32)
+        seed = (
+            jnp.mean(jnp.take(xf, jnp.asarray(nbrs), axis=0), axis=0)
+            if nbrs
+            else jnp.mean(xf, axis=0)
+        )
+        return jnp.concatenate([x, seed.astype(x.dtype)[None]], axis=0)
+
+    return jax.tree.map(_grow, stacked)
 
 
 def realization_arrays(fr: FaultRealization) -> dict:

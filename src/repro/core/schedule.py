@@ -160,6 +160,23 @@ def degraded_matrix(w, alive, link_up=None) -> np.ndarray:
     masked interpreters (``apply_masked`` / ``apply_shard_masked``), and
     the in-kernel renormalization of the fused Pallas apply: all three
     realize exactly this matrix for the same masks.
+
+    Two consequences the elastic-membership subsystem relies on:
+
+    *Composition.*  Degrading only zeroes off-diagonal entries and moves
+    their mass to the receiver diagonal, so degrading by mask A and then
+    runtime-masking by mask B realizes exactly ``degraded_matrix(W, A∩B)``
+    — a k-node concurrent crash composes runtime masks over the existing
+    single-node-out programs and needs NO multi-node-out enumeration.
+
+    *Float masks.*  The formula is linear in ``alive``: a value b > 1 at
+    node d scales every edge weight touching d by b (the excess subtracted
+    from the receiver's diagonal).  A symmetric float mask keeps W'
+    symmetric and row sums at 1, so W' stays doubly stochastic and the
+    global mean is preserved — the mean-preserving preemption drain
+    (``faults.Preemption``) up-weights a departing node exactly this way.
+    Nonnegativity bounds the boost: node d's diagonal needs
+    ``w_dd >= (b-1) * sum_j w_dj``.
     """
     w = np.asarray(w, dtype=np.float64)
     n = w.shape[0]
@@ -285,7 +302,10 @@ class GossipProgram:
 
         ``alive`` is an (n,) runtime array, ``link_up`` an optional (n, n)
         runtime array; the returned weights are traced values, so one
-        jitted executable serves every fault realization.
+        jitted executable serves every fault realization.  ``alive`` may
+        be a *float* mask (see ``degraded_matrix``): values in (0, 1)
+        down-weight a node's edges, values > 1 up-weight them (preemption
+        drain) — the w0 compensation keeps every row sum at 1 either way.
         """
         tables = self.permute_tables()
         if tables is None:

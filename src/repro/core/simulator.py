@@ -37,8 +37,8 @@ import numpy as np
 from repro.core import dbench
 from repro.core.dsgd import Topology
 from repro.core.faults import (
-    adopt_neighbor_average, realization_arrays, rejoin_neighbors,
-    track_membership,
+    admit_node, adopt_neighbor_average, drain_handoff, realization_arrays,
+    rejoin_neighbors, track_membership,
 )
 from repro.core.schedule import GossipProgram
 from repro.optim.sgd import Optimizer
@@ -79,6 +79,7 @@ class DecentralizedSimulator:
         hub_balance: bool = False,
         collect_norms: bool = False,
         has_rng: bool = False,
+        shard_nodes: bool = False,
     ):
         """Args:
           loss_fn: per-node ``loss_fn(params, batch)`` (or with rng as third
@@ -99,6 +100,11 @@ class DecentralizedSimulator:
           hub_balance: with ``mix_rounds > 1`` on a static multi-matching
             program, rotate its edge-colored matchings across the H rounds
             (``hub_balanced_rounds``) to cap hot-vertex peak send volume.
+          shard_nodes: virtual-node sharding — partition the leading node
+            axis over the host's devices (a 1-D "nodes" mesh using the
+            largest device count dividing n), so n = 256–1024 dynamics runs
+            fit a small CPU box: each device simulates an n/d block of
+            virtual nodes.  A no-op (identical numerics) on one device.
         """
         if mixing not in _ENGINES:
             raise ValueError(
@@ -117,6 +123,27 @@ class DecentralizedSimulator:
         self.fault_model = topology.fault_model
         self._last_membership = None
         self._step_cache: dict[Any, Callable] = {}
+        self.shard_nodes = bool(shard_nodes)
+        self._sharding = (
+            self._node_sharding(self.n) if self.shard_nodes else None
+        )
+
+    @staticmethod
+    def _node_sharding(n: int):
+        """NamedSharding partitioning the leading node axis over the largest
+        device count that divides n (1 device => effectively replicated)."""
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+        devs = jax.devices()
+        nd = max(d for d in range(1, len(devs) + 1) if n % d == 0)
+        mesh = Mesh(np.array(devs[:nd]), ("nodes",))
+        return NamedSharding(mesh, PartitionSpec("nodes"))
+
+    def _place(self, tree: PyTree) -> PyTree:
+        return (
+            tree if self._sharding is None
+            else jax.device_put(tree, self._sharding)
+        )
 
     # -- state ----------------------------------------------------------------
     def init(self, params: PyTree) -> SimState:
@@ -128,7 +155,9 @@ class DecentralizedSimulator:
         opt = jax.tree.map(
             lambda x: jnp.broadcast_to(x[None], (self.n,) + x.shape), opt0
         )
-        return SimState(params=stacked, opt_state=opt, step=0)
+        return SimState(
+            params=self._place(stacked), opt_state=self._place(opt), step=0
+        )
 
     # -- one training step ------------------------------------------------------
     def _build_step(self, program: Optional[GossipProgram], faulty: bool = False):
@@ -209,7 +238,13 @@ class DecentralizedSimulator:
                 new_params = _mix(new_params)
             return new_params, new_opt, loss, norms
 
-        return jax.jit(fault_step if faulty else step)
+        fn = fault_step if faulty else step
+        if self._sharding is None:
+            return jax.jit(fn)
+        # virtual-node sharding: keep every node-axis output partitioned so
+        # the state never silently collapses to replicated between steps
+        s = self._sharding
+        return jax.jit(fn, out_shardings=(s, s, s, s))
 
     def _step_for(self, step: int, epoch: int, mix: bool = True,
                   program_alive=None):
@@ -220,12 +255,14 @@ class DecentralizedSimulator:
         fault-aware step signature.
         """
         faulty = self.fault_model is not None
+        # programless keys carry n: an elastic join changes the node-axis
+        # shape the closures trace with, so sizes must not share executables
         if self.topology.centralized:
-            key = "__centralized__"
+            key = ("__centralized__", self.n)
             program = None
             faulty = False
         elif not mix:
-            key = "__local__"
+            key = ("__local__", self.n)
             program = None
         else:
             program = self.topology.fused_program_at(
@@ -234,7 +271,10 @@ class DecentralizedSimulator:
             )
             if program is not None and program_alive is not None:
                 program = program.degrade(program_alive)
-            key = program.cache_key if program is not None else "__local__"
+            key = (
+                program.cache_key if program is not None
+                else ("__local__", self.n)
+            )
         if faulty:
             key = (key, "faulty")
         if key not in self._step_cache:
@@ -257,10 +297,12 @@ class DecentralizedSimulator:
         Returns:
           (new_state, per_node_loss (n,), per_node_norms (n, n_leaves)).
         """
-        ctl = self.topology.controller
         fr = None
         if self.fault_model is not None:
             fr = self.fault_model.at(state.step)
+            if fr.joins:
+                # elastic growth: resize the family, then admit the newcomers
+                state = self._admit(state, fr, epoch)
             for node in fr.rejoin:
                 # elastic re-entry: adopt the alive neighbors' average
                 nbrs = rejoin_neighbors(
@@ -272,6 +314,20 @@ class DecentralizedSimulator:
                     adopt_neighbor_average(state.opt_state, node, nbrs),
                     state.step,
                 )
+            for node in fr.depart:
+                # clean preemption departure: exact mean-preserving handoff
+                # to the neighborhood before the node's row goes dead
+                nbrs = rejoin_neighbors(
+                    self.topology, fr, node, step=state.step, epoch=epoch,
+                    mix_every=self.mix_every,
+                )
+                state = SimState(
+                    drain_handoff(state.params, node, nbrs, fr.alive),
+                    drain_handoff(state.opt_state, node, nbrs, fr.alive),
+                    state.step,
+                )
+        ctl = self.topology.controller
+        if self.fault_model is not None:
             self._last_membership = track_membership(
                 self._last_membership, fr, ctl, state.step
             )
@@ -279,8 +335,11 @@ class DecentralizedSimulator:
             if fr is not None:
                 from repro.core.consensus import consensus_distance_masked_jit
 
+                # membership mask, NOT the raw alive mask: a float drain
+                # boost must not weight the draining node in the probe
                 xi = consensus_distance_masked_jit(
-                    state.params, jnp.asarray(fr.alive, jnp.float32)
+                    state.params,
+                    jnp.asarray(np.asarray(fr.alive) != 0, jnp.float32),
                 )
             else:
                 from repro.core.consensus import consensus_distance_jit
@@ -291,13 +350,10 @@ class DecentralizedSimulator:
         # index time-varying schedules by gossip round (see SPMDTrainer):
         # raw-step indexing under mix_every=H would alias period-p families
         # to a single phase whenever p divides H.
+        sel = fr.selection_mask() if fr is not None else None
         fn = self._step_for(
             state.step // self.mix_every, epoch, mix=mix,
-            program_alive=(
-                fr.program_alive
-                if fr is not None and not fr.program_alive.all()
-                else None
-            ),
+            program_alive=(sel if sel is not None and not sel.all() else None),
         )
         if rng is None:
             rng = jax.random.PRNGKey(0)
@@ -307,6 +363,73 @@ class DecentralizedSimulator:
         else:
             p, o, loss, norms = fn(*args)
         return SimState(p, o, state.step + 1), loss, norms
+
+    # -- elastic growth ----------------------------------------------------------
+    def _admit(self, state: SimState, fr, epoch: int) -> SimState:
+        """Grow membership to ``len(fr.program_alive)``: re-derive the
+        topology family at the new n (``Topology.resized``; the fresh
+        controller adopts the old run state) and append one state row per
+        joining node seeded with its neighborhood average."""
+        m = len(fr.program_alive)
+        old_ctl = self.topology.controller
+        topo = self.topology.resized(m)
+        if topo.controller is not None and old_ctl is not None:
+            topo.controller.adopt(old_ctl)
+        self.topology = topo
+        self.n = m
+        if self.shard_nodes:
+            self._sharding = self._node_sharding(m)
+        params, opt = state.params, state.opt_state
+        rows = len(fr.program_alive) - len(fr.joins)
+        for node in sorted(fr.joins):
+            # same-step multi-joins admit in index order; a later joiner is
+            # not yet a row, so drop it from an earlier joiner's average
+            nbrs = [
+                i for i in rejoin_neighbors(
+                    topo, fr, node, step=state.step, epoch=epoch,
+                    mix_every=self.mix_every,
+                )
+                if i < rows
+            ]
+            params = admit_node(params, nbrs)
+            opt = admit_node(opt, nbrs)
+            rows += 1
+        return SimState(self._place(params), self._place(opt), state.step)
+
+    # -- crash-consistent resume -------------------------------------------------
+    def snapshot_extra(self) -> dict:
+        """Engine run state a crash-consistent checkpoint must carry beyond
+        (params, opt_state): the membership tracking (else the first
+        post-resume membership change skips its controller re-arm) and the
+        controller's phase/rung/log state.  JSON-serializable."""
+        d: dict = {
+            "n": int(self.n),
+            "last_membership": (
+                None if self._last_membership is None
+                else [bool(b) for b in self._last_membership]
+            ),
+        }
+        ctl = self.topology.controller
+        if ctl is not None:
+            d["controller"] = ctl.state_dict()
+        return d
+
+    def restore_extra(self, d: dict) -> None:
+        """Inverse of ``snapshot_extra`` on a freshly-built engine."""
+        n = int(d.get("n", self.n))
+        if n != self.n:
+            # elastic resume: the run had already grown past the initial n
+            self.topology = self.topology.resized(n)
+            self.n = n
+            if self.shard_nodes:
+                self._sharding = self._node_sharding(n)
+        lm = d.get("last_membership")
+        self._last_membership = (
+            None if lm is None else tuple(bool(b) for b in lm)
+        )
+        ctl = self.topology.controller
+        if ctl is not None and d.get("controller") is not None:
+            ctl.load_state_dict(d["controller"])
 
     # -- full run helper ---------------------------------------------------------
     def run(

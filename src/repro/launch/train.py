@@ -184,6 +184,12 @@ class SPMDTrainer:
         self.mix_rounds = max(int(mix_rounds), 1)
         self.hub_balance = bool(hub_balance)
         self.fault_model = topology.fault_model
+        if self.fault_model is not None and self.fault_model.elastic:
+            raise ValueError(
+                "elastic (join) fault models grow membership past the mesh's "
+                "gossip size; the SPMD trainer's device mesh is fixed — use "
+                "the DecentralizedSimulator for join dynamics"
+            )
         self._last_membership = None
         self.fused_apply = bool(fused_apply)
         if self.fused_apply:
@@ -639,7 +645,8 @@ class SPMDTrainer:
         fr = None
         if self.fault_model is not None and self.g > 1:
             from repro.core.faults import (
-                adopt_neighbor_average, rejoin_neighbors, track_membership,
+                adopt_neighbor_average, drain_handoff, rejoin_neighbors,
+                track_membership,
             )
 
             fr = self.fault_model.at(state.step)
@@ -654,6 +661,19 @@ class SPMDTrainer:
                         adopt_neighbor_average(state.opt_state, node, nbrs),
                         state.step,
                     )
+            for node in fr.depart:
+                # clean preemption departure: exact mean-preserving handoff
+                # to the neighborhood before the node's row goes dead
+                nbrs = rejoin_neighbors(
+                    self.topology, fr, node, step=state.step, epoch=epoch,
+                    mix_every=self.mix_every,
+                )
+                with _set_mesh(self.mesh):
+                    state = TrainState(
+                        drain_handoff(state.params, node, nbrs, fr.alive),
+                        drain_handoff(state.opt_state, node, nbrs, fr.alive),
+                        state.step,
+                    )
             self._last_membership = track_membership(
                 self._last_membership, fr, ctl, state.step
             )
@@ -662,8 +682,11 @@ class SPMDTrainer:
                 if fr is not None:
                     from repro.core.consensus import consensus_distance_masked_jit
 
+                    # membership mask, NOT the raw alive mask: a float drain
+                    # boost must not weight the draining node in the probe
                     xi = consensus_distance_masked_jit(
-                        state.params, jnp.asarray(fr.alive, jnp.float32)
+                        state.params,
+                        jnp.asarray(np.asarray(fr.alive) != 0, jnp.float32),
                     )
                 else:
                     from repro.core.consensus import consensus_distance_jit
@@ -676,14 +699,14 @@ class SPMDTrainer:
         # raw step would alias a period-p family to the single phase
         # H-1 mod p whenever p | H (e.g. one-peer n=16 with H=4 would gossip
         # hop 8 forever, splitting the network into isolated pairs).
+        # the *selection* mask: for composed concurrent crashes it stays
+        # all-ones (base program + runtime masks), so the degraded-program
+        # branch — and any extra executable — is never taken
+        sel = fr.selection_mask() if fr is not None else None
         fn = self.step_fn(
             epoch, step=state.step // self.mix_every,
             mix=mix or self.topology.centralized,
-            program_alive=(
-                fr.program_alive
-                if fr is not None and not fr.program_alive.all()
-                else None
-            ),
+            program_alive=(sel if sel is not None and not sel.all() else None),
         )
         args = (state.params, state.opt_state, batch, jnp.float32(lr))
         if fr is not None:
@@ -693,6 +716,35 @@ class SPMDTrainer:
         with _set_mesh(self.mesh):
             p, o, loss, norms = fn(*args)
         return TrainState(p, o, state.step + 1), loss, norms
+
+    # -- crash-consistent resume -------------------------------------------------
+    def snapshot_extra(self) -> dict:
+        """Engine run state a crash-consistent checkpoint must carry beyond
+        (params, opt_state): membership tracking (else the first
+        post-resume membership change skips its controller re-arm) and the
+        consensus controller's phase/rung/log state.  Fault realizations
+        themselves are pure fn(seed, step) and need no persisting —
+        replaying from the checkpoint step regenerates them bit-exactly."""
+        d: dict = {
+            "last_membership": (
+                None if self._last_membership is None
+                else [bool(b) for b in self._last_membership]
+            ),
+        }
+        ctl = self.topology.controller
+        if ctl is not None:
+            d["controller"] = ctl.state_dict()
+        return d
+
+    def restore_extra(self, d: dict) -> None:
+        """Inverse of ``snapshot_extra`` on a freshly-built trainer."""
+        lm = d.get("last_membership")
+        self._last_membership = (
+            None if lm is None else tuple(bool(b) for b in lm)
+        )
+        ctl = self.topology.controller
+        if ctl is not None and d.get("controller") is not None:
+            ctl.load_state_dict(d["controller"])
 
     def lower_step(self, shape, *, epoch: int = 0, step: int = 0):
         """Abstract lowering for the dry-run: ShapeDtypeStructs only."""
@@ -773,20 +825,34 @@ def main() -> None:
                     help="run optimizer+gossip as one fused Pallas pass for "
                          "all-PPermute programs (plain momentum-SGD only)")
     ap.add_argument("--fault-model", default="none",
-                    choices=["none", "crash", "dropout", "link", "straggler"],
+                    choices=["none", "crash", "concurrent", "preempt",
+                             "dropout", "link", "straggler"],
                     help="seeded fault injection: permanent single-node "
-                         "crash, transient node dropout, Bernoulli link "
-                         "failure, or stragglers that skip the local update "
-                         "but still mix (core/faults.py)")
+                         "crash, k-node concurrent crashes, planned "
+                         "preemption drain, transient node dropout, "
+                         "Bernoulli link failure, or stragglers that skip "
+                         "the local update but still mix (core/faults.py; "
+                         "'join' is simulator-only — the mesh is fixed)")
     ap.add_argument("--fault-rate", type=float, default=0.1,
-                    help="per-step fault probability (crash: geometric onset)")
+                    help="per-step fault probability (crash/concurrent/"
+                         "preempt: geometric onset)")
     ap.add_argument("--fault-seed", type=int, default=0,
                     help="fault realization seed (step-deterministic; both "
                          "engines draw identical realizations)")
     ap.add_argument("--fault-down-steps", type=int, default=None,
-                    help="crash only: steps until the victim rejoins by "
+                    help="crash/concurrent: steps until a victim rejoins by "
                          "adopting its neighbors' average (elastic "
                          "membership; default: never)")
+    ap.add_argument("--fault-k", type=int, default=2,
+                    help="concurrent only: number of victims with "
+                         "overlapping down windows")
+    ap.add_argument("--fault-drain-steps", type=int, default=5,
+                    help="preempt only: announced drain window before the "
+                         "clean mean-preserving departure")
+    ap.add_argument("--fault-enumerate", action="store_true",
+                    help="concurrent only: pre-enumerate the realized "
+                         "multi-node degraded programs (bounded fast path) "
+                         "instead of the composed runtime-mask default")
     ap.add_argument("--k-floor", default="2",
                     help="Ada decay floor: an int, or 'one_peer' for the "
                          "time-varying one-peer exponential family")
@@ -806,6 +872,13 @@ def main() -> None:
     ap.add_argument("--mesh", default="2,2", help="data,model (CPU uses host devices)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the latest checkpoint in --ckpt-dir "
+                         "(crash-consistent: restores params, optimizer, "
+                         "controller phase/rung/logs, and membership "
+                         "tracking; fault realizations are pure fn(seed, "
+                         "step), so the continued run is bit-identical to "
+                         "an uninterrupted one)")
     args = ap.parse_args()
 
     import jax
@@ -843,7 +916,9 @@ def main() -> None:
 
     fault_model = make_fault_model(
         args.fault_model, g, rate=args.fault_rate, seed=args.fault_seed,
-        down_steps=args.fault_down_steps,
+        down_steps=args.fault_down_steps, k=args.fault_k,
+        drain_steps=args.fault_drain_steps,
+        enumerate_programs=args.fault_enumerate,
     )
     topo = make_topology(
         args.topology, g, k_floor=k_floor,
@@ -870,13 +945,25 @@ def main() -> None:
     n_progs = len(trainer.precompile_programs(args.steps // args.steps_per_epoch + 1))
     print(f"{n_progs} distinct mixing program(s) over the run")
     state = trainer.init_state(jax.random.PRNGKey(0))
+    start_step = 0
+    if args.resume:
+        if not args.ckpt_dir:
+            raise SystemExit("--resume requires --ckpt-dir")
+        from repro.checkpoint import load_checkpoint, load_checkpoint_extra
+
+        restored, start_step = load_checkpoint(
+            args.ckpt_dir, {"p": state.params, "o": state.opt_state}
+        )
+        trainer.restore_extra(load_checkpoint_extra(args.ckpt_dir, start_step) or {})
+        state = TrainState(restored["p"], restored["o"], start_step)
+        print(f"resumed from {args.ckpt_dir} at step {start_step}")
     src = SyntheticLM(vocab=cfg.vocab, seq_len=args.seq, seed=0)
     scale = lr_scale(
         args.lr_scaling, global_batch=g * args.per_node_batch,
         base_batch=max(g * args.per_node_batch, 1), graph_degree=topo.degree_at(0),
     )
     t0 = time.time()
-    for t in range(args.steps):
+    for t in range(start_step, args.steps):
         batch = {k: jnp.asarray(v) for k, v in src.stacked(g, t, args.per_node_batch).items()}
         epoch = t // args.steps_per_epoch
         state, loss, norms = trainer.train_step(state, batch, args.lr * scale, epoch=epoch)
@@ -886,7 +973,11 @@ def main() -> None:
         if args.ckpt_dir and args.ckpt_every and (t + 1) % args.ckpt_every == 0:
             from repro.checkpoint import save_checkpoint
 
-            save_checkpoint(args.ckpt_dir, t + 1, {"p": state.params, "o": state.opt_state})
+            save_checkpoint(
+                args.ckpt_dir, t + 1,
+                {"p": state.params, "o": state.opt_state},
+                extra=trainer.snapshot_extra(),
+            )
     print(f"{args.steps} steps in {time.time()-t0:.1f}s")
     if topo.controller is not None:
         ctl = topo.controller

@@ -1,17 +1,21 @@
 """Subprocess body for test_spmd.py: fault injection on both engines.
 
-Runs the SAME seeded fault stream — transient dropout, then a permanent
-crash with elastic rejoin — through (a) the production SPMD trainer and
-(b) the vmap/dense-matrix simulator with identical init/data, and checks:
+Runs the SAME seeded fault stream — transient dropout, a permanent crash
+with elastic rejoin, a 2-node CONCURRENT crash (composed runtime masks),
+and a preemption DRAIN-then-leave — through (a) the production SPMD
+trainer and (b) the vmap/dense-matrix simulator with identical init/data,
+and checks:
 
   * both engines draw identical fault realizations from the shared seeded
     model (no cross-engine channel needed),
   * final parameters agree to float32 round-off — the fault-aware step
-    (masked mixing + gated updates + degraded programs + rejoin) is
-    engine-equivalent,
+    (masked mixing + gated updates + degraded programs + boosted drains +
+    mean-preserving handoff + rejoin) is engine-equivalent,
   * the trainer compiles nothing beyond its pre-enumerated program set
-    (base + single-node-out degrades), and a transient run's executable
-    count equals the fault-free count.
+    (base + single-node-out degrades), and a transient run's — AND a
+    composed concurrent-crash run's — executable count equals the
+    fault-free count (the elastic acceptance bar: k simultaneous failures
+    ride runtime masks, zero extra executables).
 """
 import os
 import sys
@@ -51,6 +55,11 @@ maxdiff = 0.0
 for kind, kw in [
     ("dropout", dict(rate=0.35, seed=3)),
     ("crash", dict(rate=0.8, seed=1, down_steps=3)),
+    # 2-node concurrent crash, composed execution: overlapping windows ride
+    # the runtime alive mask over the BASE program
+    ("concurrent", dict(rate=0.8, seed=2, k=2, down_steps=3)),
+    # planned preemption: announce -> boosted drain -> exact handoff -> leave
+    ("preempt", dict(rate=0.8, seed=1, drain_steps=3)),
 ]:
     # --- SPMD engine -------------------------------------------------------
     fm = make_fault_model(kind, G, **kw)
@@ -63,7 +72,9 @@ for kind, kw in [
         state, loss, _ = trainer.train_step(state, batch, 0.05, epoch=0)
     used = {k[0] for k in trainer._step_cache if isinstance(k, tuple)}
     assert used <= allowed, f"{kind}: executables beyond the set: {used - allowed}"
-    if kind == "dropout":
+    if kind in ("dropout", "concurrent"):
+        # transient masks AND composed concurrent crashes compile exactly
+        # as many executables as the fault-free run
         base = SPMDTrainer(
             cfg, mesh, make_topology("d_ring", G), opt, donate=False
         )

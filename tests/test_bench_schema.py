@@ -36,6 +36,12 @@ SCHEMA = {
         ("acc", "xi_trace", "us_per_step", "comm_bytes_per_node", "steps",
          "fault_model", "rate"),
     ),
+    "elastic": (
+        r"^(d_ring|d_one_peer_exp)/(concurrent\d+|preempt|crash|join|dropout)"
+        r"[\d.]*/n\d+$",
+        ("acc", "xi_trace", "us_per_step", "steps", "fault_model",
+         "executables", "n_final"),
+    ),
 }
 
 MIXING_FIELDS = ("best_us", "median_us", "p90_us", "bytes_per_node",
@@ -72,6 +78,25 @@ def test_section_key_and_field_layout(bench, section):
             want = FUSION_FIELDS if key.startswith("fusion/") else MIXING_FIELDS
         missing = set(want) - set(entry)
         assert not missing, f"{section}/{key} lost fields {sorted(missing)}"
+
+
+def test_elastic_section_covers_membership_dynamics(bench):
+    """PR acceptance in artifact form: the elastic sweep spans concurrent
+    crash counts, drain-vs-hard-crash, a true join that GREW membership,
+    and an n=512 virtual-node row; composed concurrent crashes compile no
+    more executables than a base run (one program on a static ring)."""
+    kinds = {k.split("/")[1] for k in bench["elastic"]}
+    assert {"concurrent2", "concurrent3", "preempt", "crash", "join"} <= kinds
+    for key, v in bench["elastic"].items():
+        kind = key.split("/")[1]
+        if kind.startswith("concurrent"):
+            assert v["executables"] == 1, key
+        if kind == "join":
+            assert v["n_final"] > int(key.rsplit("/n", 1)[1]), key
+    big = [k for k in bench["elastic"] if k.endswith("/n512")]
+    assert big, "n=512 virtual-node rows missing"
+    for k in big:
+        assert bench["elastic"][k]["n_final"] == 512
 
 
 def test_faults_section_covers_three_topology_classes(bench):

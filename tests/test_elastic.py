@@ -1,0 +1,521 @@
+"""Elastic membership at scale (PR 6): concurrent failures, preemption
+drains, true mid-run joins, virtual-node sharding, crash-consistent resume.
+
+The load-bearing claims pinned here:
+
+* Mask composition — degrading a program by mask A and runtime-masking by
+  mask B realizes exactly ``degraded_matrix(W, A & B)``, so a k-node
+  concurrent crash rides runtime masks over the existing single-node-out
+  programs and compiles ZERO extra executables.
+* The composed result stays symmetric + doubly stochastic over the
+  survivor set (dead rows identity).
+* A preemption drain's float boost mask keeps W doubly stochastic (mean
+  preserved every drain step), and ``drain_handoff`` makes the survivors'
+  post-departure mean EXACTLY the pre-departure global mean.
+* Same-step membership events coalesce into ONE controller re-arm log
+  entry.
+* Joins grow the simulator past its initial n, re-derive the topology
+  family, and compile nothing beyond the pre-declared growth set.
+* ``shard_nodes`` (virtual-node sharding) is a numeric no-op.
+* Interrupted + resumed == uninterrupted, bit-identically, including the
+  controller's transition/event/trace logs.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.ada import AdaSchedule
+from repro.core.consensus import ConsensusController
+from repro.core.dsgd import make_topology
+from repro.core.faults import (
+    ConcurrentCrash, Join, Preemption, admit_node, degraded_matrix,
+    drain_handoff, make_fault_model,
+)
+from repro.core.graphs import from_adjacency
+from repro.core.schedule import compile_graph
+from repro.core.simulator import DecentralizedSimulator
+from repro.optim.sgd import sgd
+
+
+def _quad_loss(p, b):
+    return jnp.mean((b - p["w"]) ** 2)
+
+
+def _random_connected_graph(n, seed):
+    rng = np.random.default_rng(seed)
+    edges = set()
+    perm = rng.permutation(n)
+    for a, b in zip(perm[:-1], perm[1:]):
+        edges.add((min(a, b), max(a, b)))
+    for _ in range(int(rng.integers(0, n))):
+        i, j = rng.integers(0, n, size=2)
+        if i != j:
+            edges.add((min(i, j), max(i, j)))
+    return from_adjacency(sorted((int(i), int(j)) for i, j in edges))
+
+
+def _realized_matrix(program, alive_a, alive_b):
+    """The matrix actually applied by degrade(A) + runtime-mask(B)."""
+    n = program.n
+    eye = {"w": jnp.eye(n, dtype=jnp.float32)}
+    out = program.degrade(tuple(bool(a) for a in alive_a)).apply_masked(
+        eye, jnp.asarray(alive_b, jnp.float32)
+    )
+    return np.asarray(out["w"], dtype=np.float64)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: composed-mask property test vs the dense oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(6))
+def test_composed_masks_equal_dense_oracle_two_crashes(seed):
+    """degrade(kill a) then runtime-mask(kill b) == degraded_matrix(W, both
+    dead) <= 1e-6 on random connected graphs — the identity that lets
+    ``ConcurrentCrash`` compose k crashes over single-node-out programs."""
+    rng = np.random.default_rng(100 + seed)
+    n = int(rng.integers(5, 12))
+    g = _random_connected_graph(n, seed)
+    program = compile_graph(g)
+    a, b = rng.choice(n, size=2, replace=False)
+    mask_a = np.ones(n, dtype=bool)
+    mask_a[a] = False
+    mask_b = np.ones(n, dtype=bool)
+    mask_b[b] = False
+
+    realized = _realized_matrix(program, mask_a, mask_b)
+    oracle = degraded_matrix(g.mixing_matrix(), mask_a & mask_b)
+    assert np.max(np.abs(realized - oracle)) <= 1e-6
+
+    # survivor-set structure: symmetric + doubly stochastic rows AND cols,
+    # dead rows exactly identity
+    surv = mask_a & mask_b
+    block = realized[np.ix_(surv, surv)]
+    assert np.max(np.abs(block - block.T)) <= 1e-6
+    np.testing.assert_allclose(block.sum(axis=0), 1.0, atol=1e-6)
+    np.testing.assert_allclose(block.sum(axis=1), 1.0, atol=1e-6)
+    for d in np.nonzero(~surv)[0]:
+        row = np.zeros(n)
+        row[d] = 1.0
+        np.testing.assert_allclose(realized[d], row, atol=1e-6)
+
+
+def test_composed_masks_match_direct_multinode_degrade():
+    """Composing over DISJOINT dead sets equals direct multi-node
+    degradation — order-free, so the engines need no event ordering."""
+    g = _random_connected_graph(9, 3)
+    program = compile_graph(g)
+    mask_a = np.array([True] * 9)
+    mask_a[2] = False
+    mask_b = np.array([True] * 9)
+    mask_b[6] = False
+    ab = _realized_matrix(program, mask_a, mask_b)
+    ba = _realized_matrix(program, mask_b, mask_a)
+    direct = np.asarray(
+        program.degrade(tuple(mask_a & mask_b)).apply_masked(
+            {"w": jnp.eye(9, dtype=jnp.float32)},
+            jnp.ones(9, jnp.float32),
+        )["w"],
+        dtype=np.float64,
+    )
+    assert np.max(np.abs(ab - ba)) <= 1e-6
+    assert np.max(np.abs(ab - direct)) <= 1e-6
+
+
+# ---------------------------------------------------------------------------
+# ConcurrentCrash
+# ---------------------------------------------------------------------------
+
+def test_concurrent_crash_timeline_and_modes():
+    m = ConcurrentCrash(n=10, rate=0.6, seed=4, k=3, down_steps=4)
+    assert len(set(m.victims)) == 3
+    # pure fn(seed, step): same realization from a twin model
+    twin = ConcurrentCrash(n=10, rate=0.6, seed=4, k=3, down_steps=4)
+    for t in range(15):
+        np.testing.assert_array_equal(m.at(t).alive, twin.at(t).alive)
+    # composed mode: selection mask stays all-ones even while nodes are dead
+    t_dead = max(o for o in m.onsets)
+    fr = m.at(t_dead)
+    assert not fr.program_alive.all()
+    assert fr.selection_mask().all()
+    # rejoins fire per victim at its own off step
+    rejoined = {v for t in range(30) for v in m.at(t).rejoin}
+    assert rejoined == set(m.victims)
+
+
+def test_concurrent_enumerated_masks_are_bounded_and_realized():
+    m = ConcurrentCrash(
+        n=10, rate=0.6, seed=4, k=3, down_steps=4, enumerate_programs=True
+    )
+    masks = m.program_masks()
+    # <= 2k timeline-realized masks, never the C(n, k) combinatorial set
+    assert 1 <= len(masks) <= 2 * 3
+    realized = set()
+    for t in range(40):
+        key = tuple(bool(a) for a in m.at(t).program_alive)
+        if not all(key):
+            realized.add(key)
+    assert realized == set(masks)
+    # enumerated mode selects the true membership
+    t_dead = max(o for o in m.onsets)
+    assert not m.at(t_dead).selection_mask().all()
+
+
+def test_concurrent_compiles_no_more_executables_than_fault_free():
+    """Acceptance bar (engine-level, simulator): a composed concurrent-
+    crash run's executable cache is no larger than the fault-free run's."""
+    def _run(fault_model):
+        topo = make_topology("d_ring", 8, fault_model=fault_model)
+        sim = DecentralizedSimulator(_quad_loss, sgd(0.1), topo)
+        state = sim.init({"w": jnp.zeros((3,), jnp.float32)})
+        rng = np.random.default_rng(0)
+        for _ in range(10):
+            b = jnp.asarray(rng.normal(size=(8, 2, 3)).astype(np.float32))
+            state, _, _ = sim.train_step(state, b, 0.05)
+        return len(sim._step_cache)
+
+    base = _run(None)
+    composed = _run(make_fault_model("concurrent", 8, rate=0.7, seed=1, k=2))
+    assert composed <= base
+
+
+# ---------------------------------------------------------------------------
+# Preemption: drain boost + exact mean-preserving handoff
+# ---------------------------------------------------------------------------
+
+def test_drain_boost_keeps_matrix_doubly_stochastic():
+    g = _random_connected_graph(8, 7)
+    program = compile_graph(g)
+    boost = np.ones(8)
+    boost[3] = 1.5
+    realized = np.asarray(
+        program.apply_masked(
+            {"w": jnp.eye(8, dtype=jnp.float32)},
+            jnp.asarray(boost, jnp.float32),
+        )["w"],
+        dtype=np.float64,
+    )
+    oracle = degraded_matrix(g.mixing_matrix(), boost)
+    assert np.max(np.abs(realized - oracle)) <= 1e-6
+    np.testing.assert_allclose(realized.sum(axis=0), 1.0, atol=1e-6)
+    np.testing.assert_allclose(realized.sum(axis=1), 1.0, atol=1e-6)
+    assert np.max(np.abs(realized - realized.T)) <= 1e-6
+
+
+def test_preemption_departs_once_after_drain():
+    m = Preemption(n=8, rate=0.5, seed=2, drain_steps=3)
+    a, d = m.announce_step, m.depart_step
+    assert d == a + 3
+    for t in range(a, d):
+        fr = m.at(t)
+        assert fr.alive[m.victim] == pytest.approx(1.5)
+        assert fr.update.all() and fr.program_alive.all()
+        assert fr.faulty  # float boost must route through the masked step
+    departs = [t for t in range(d + 10) if m.at(t).depart]
+    assert departs == [d]
+    assert not m.at(d + 5).program_alive[m.victim]
+    # one single-node-out degraded program, like a hard crash
+    assert len(m.program_masks()) == 1
+
+
+def test_drain_handoff_preserves_global_mean_exactly():
+    rng = np.random.default_rng(11)
+    n, node = 9, 4
+    stacked = {"w": jnp.asarray(rng.normal(size=(n, 5)).astype(np.float32))}
+    alive = np.ones(n, dtype=bool)
+    alive[node] = False
+    out = drain_handoff(stacked, node, [3, 5, 8], alive)
+    pre_mean = np.asarray(stacked["w"], np.float64).mean(axis=0)
+    post = np.asarray(out["w"], np.float64)
+    surv_mean = post[alive].mean(axis=0)
+    np.testing.assert_allclose(surv_mean, pre_mean, atol=1e-6)
+    # non-neighbors untouched
+    untouched = [i for i in range(n) if i not in (3, 5, 8)]
+    np.testing.assert_array_equal(
+        post[untouched], np.asarray(stacked["w"])[untouched]
+    )
+
+
+def test_preemption_preserves_survivor_mean_hard_crash_does_not():
+    """The drain's whole point: a planned departure (boosted drain + exact
+    handoff) leaves the survivors' mean AT the pre-event global mean, while
+    a hard crash of a node holding distinct state jumps it — the Xi_t
+    discontinuity the elastic benchmark measures.  Pure gossip (lr=0) so
+    the membership event is the only mean-moving force."""
+    from repro.core.simulator import SimState
+
+    def _mean_jump(kind):
+        fm = make_fault_model(kind, 8, rate=0.5, seed=2, drain_steps=3)
+        topo = make_topology("d_ring", 8, fault_model=fm)
+        sim = DecentralizedSimulator(_quad_loss, sgd(0.1), topo)
+        state = sim.init({"w": jnp.zeros((4,), jnp.float32)})
+        rng = np.random.default_rng(5)
+        state = SimState(
+            {"w": jnp.asarray(rng.normal(size=(8, 4)).astype(np.float32))},
+            state.opt_state, 0,
+        )
+        event = fm.depart_step if kind == "preempt" else fm.crash_step
+        zero = jnp.zeros((8, 2, 4), jnp.float32)
+        for _ in range(event):
+            state, _, _ = sim.train_step(state, zero, 0.0)
+        pre_mean = np.asarray(state.params["w"], np.float64).mean(axis=0)
+        state, _, _ = sim.train_step(state, zero, 0.0)
+        surv = np.asarray(fm.at(event).alive) != 0
+        post_mean = (
+            np.asarray(state.params["w"], np.float64)[surv].mean(axis=0)
+        )
+        return float(np.abs(post_mean - pre_mean).max())
+
+    assert _mean_jump("preempt") <= 1e-6
+    assert _mean_jump("crash") > 1e-3
+
+
+# ---------------------------------------------------------------------------
+# Satellite: same-step membership events coalesce into one re-arm entry
+# ---------------------------------------------------------------------------
+
+def _controller(n=8):
+    return ConsensusController(
+        schedule=AdaSchedule(n_nodes=n, k0=3, gamma_k=0.02, k_floor="one_peer"),
+        target=0.5,
+    )
+
+
+def test_rearm_coalesces_same_step_events():
+    ctl = _controller()
+    ctl.rearm(5, "membership")
+    ctl.rearm(5, "membership")
+    ctl.rearm(5, "rejoin")
+    ctl.rearm(9, "membership")
+    assert ctl.events == [(5, "membership+rejoin"), (9, "membership")]
+
+
+def test_simultaneous_concurrent_crash_logs_single_rearm():
+    """A k-node same-step crash changes the membership key once; the
+    controller log must carry ONE entry for that step, not k."""
+    fm = ConcurrentCrash(n=8, rate=0.999, seed=0, k=3)
+    # near-1 rate => geometric onsets all equal 1: a simultaneous crash
+    assert len(set(fm.onsets)) == 1
+    topo = make_topology("d_ada", 8, consensus_target=0.25,
+                         k_floor="one_peer", fault_model=fm)
+    sim = DecentralizedSimulator(_quad_loss, sgd(0.1), topo)
+    state = sim.init({"w": jnp.zeros((3,), jnp.float32)})
+    rng = np.random.default_rng(0)
+    for _ in range(4):
+        b = jnp.asarray(rng.normal(size=(8, 2, 3)).astype(np.float32))
+        state, _, _ = sim.train_step(state, b, 0.05)
+    events = topo.controller.events
+    assert len(events) == 1 and events[0][0] == fm.onsets[0]
+
+
+# ---------------------------------------------------------------------------
+# Join: true mid-run growth
+# ---------------------------------------------------------------------------
+
+def test_join_grows_membership_and_topology():
+    fm = Join(n=4, rate=0.0, seed=0, join_steps=(3, 5))
+    assert fm.elastic and fm.membership_sizes() == (4, 5, 6)
+    topo = make_topology("d_ring", 4, fault_model=fm)
+    sim = DecentralizedSimulator(_quad_loss, sgd(0.1), topo)
+    state = sim.init({"w": jnp.zeros((3,), jnp.float32)})
+    rng = np.random.default_rng(0)
+    for t in range(8):
+        m = fm.n_at(t)
+        b = jnp.asarray(rng.normal(size=(m, 2, 3)).astype(np.float32))
+        state, loss, _ = sim.train_step(state, b, 0.05)
+        assert state.params["w"].shape[0] == m
+        assert loss.shape[0] == m
+    assert sim.n == 6 and sim.topology.n_nodes == 6
+    assert np.isfinite(np.asarray(state.params["w"])).all()
+
+
+def test_join_compiles_only_predeclared_sizes():
+    """Programs for every pre-declared size are enumerable up front; the
+    run compiles nothing beyond that set (zero mid-run surprises)."""
+    fm = Join(n=4, rate=0.0, seed=0, join_steps=(2,))
+    topo = make_topology("d_ring", 4, fault_model=fm)
+    allowed = {p.cache_key for _, p in topo.distinct_programs()}
+    assert {p.n for _, p in topo.distinct_programs()} == {4, 5}
+    sim = DecentralizedSimulator(_quad_loss, sgd(0.1), topo)
+    state = sim.init({"w": jnp.zeros((3,), jnp.float32)})
+    rng = np.random.default_rng(0)
+    for t in range(6):
+        m = fm.n_at(t)
+        b = jnp.asarray(rng.normal(size=(m, 2, 3)).astype(np.float32))
+        state, _, _ = sim.train_step(state, b, 0.05)
+    used = {k for k in sim._step_cache if not isinstance(k, tuple) or
+            not str(k[0]).startswith("__")}
+    used_programs = {k[0] if isinstance(k, tuple) and k[1] == "faulty" else k
+                     for k in used}
+    assert used_programs <= allowed
+
+
+def test_joining_node_adopts_neighbor_average():
+    stacked = {"w": jnp.asarray(np.arange(8, dtype=np.float32).reshape(4, 2))}
+    grown = admit_node(stacked, [0, 2])
+    assert grown["w"].shape == (5, 2)
+    np.testing.assert_allclose(
+        np.asarray(grown["w"])[4],
+        np.asarray(stacked["w"])[[0, 2]].mean(axis=0),
+    )
+    # empty neighborhood: global mean
+    grown2 = admit_node(stacked, [])
+    np.testing.assert_allclose(
+        np.asarray(grown2["w"])[4], np.asarray(stacked["w"]).mean(axis=0)
+    )
+
+
+def test_controller_adopt_clamps_rung_to_new_ladder():
+    old = _controller(n=16)
+    old.rung = len(old.ladder) - 1
+    old.transitions.append((7, old.rung))
+    old.events.append((3, "membership"))
+    new = _controller(n=17)
+    new.adopt(old)
+    assert new.rung == min(old.rung, len(new.ladder) - 1)
+    assert new.transitions == old.transitions
+    assert new.events == old.events
+
+
+def test_spmd_trainer_rejects_elastic_models():
+    from repro.configs import get_config
+    from repro.launch.mesh import make_mesh
+    from repro.launch.train import SPMDTrainer
+    from repro.optim.sgd import get_optimizer
+
+    fm = Join(n=1, rate=0.0, seed=0, join_steps=(2,))
+    topo = make_topology("d_ring", 1, fault_model=fm)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    with pytest.raises(ValueError, match="elastic"):
+        SPMDTrainer(
+            get_config("granite-8b-reduced"), mesh, topo, get_optimizer("sgd")
+        )
+
+
+# ---------------------------------------------------------------------------
+# Virtual-node sharding
+# ---------------------------------------------------------------------------
+
+def test_shard_nodes_is_numeric_noop():
+    """Virtual-node sharding changes placement, never numerics (on one
+    device the mesh is trivial; on more it partitions the node axis)."""
+    def _run(shard):
+        fm = make_fault_model("dropout", 8, rate=0.3, seed=3)
+        topo = make_topology("d_one_peer_exp", 8, fault_model=fm)
+        sim = DecentralizedSimulator(
+            _quad_loss, sgd(0.1), topo, mixing="shift", shard_nodes=shard
+        )
+        state = sim.init({"w": jnp.zeros((4,), jnp.float32)})
+        rng = np.random.default_rng(2)
+        for _ in range(6):
+            b = jnp.asarray(rng.normal(size=(8, 2, 4)).astype(np.float32))
+            state, _, _ = sim.train_step(state, b, 0.05)
+        return np.asarray(state.params["w"])
+
+    np.testing.assert_array_equal(_run(False), _run(True))
+
+
+def test_shard_nodes_runs_large_n_quickly():
+    """n=512 one-peer steps run through the sharded path (the elastic
+    benchmark's --quick tier depends on this staying cheap)."""
+    topo = make_topology(
+        "d_one_peer_exp", 512,
+        fault_model=make_fault_model("dropout", 512, rate=0.1, seed=0),
+    )
+    sim = DecentralizedSimulator(
+        _quad_loss, sgd(0.1), topo, mixing="shift", shard_nodes=True
+    )
+    state = sim.init({"w": jnp.zeros((4,), jnp.float32)})
+    rng = np.random.default_rng(0)
+    for _ in range(3):
+        b = jnp.asarray(rng.normal(size=(512, 1, 4)).astype(np.float32))
+        state, loss, _ = sim.train_step(state, b, 0.05)
+    assert loss.shape == (512,)
+    assert np.isfinite(np.asarray(state.params["w"])).all()
+
+
+# ---------------------------------------------------------------------------
+# Satellite: crash-consistent resume determinism
+# ---------------------------------------------------------------------------
+
+def _resume_sim():
+    fm = make_fault_model("dropout", 8, rate=0.35, seed=3)
+    topo = make_topology(
+        "d_ada", 8, consensus_target=0.25, k_floor="one_peer", fault_model=fm
+    )
+    return DecentralizedSimulator(_quad_loss, sgd(0.1), topo)
+
+
+def _batch(t):
+    rng = np.random.default_rng(1000 + t)
+    return jnp.asarray(rng.normal(size=(8, 2, 3)).astype(np.float32))
+
+
+def test_resume_bit_identical_to_uninterrupted(tmp_path):
+    """Checkpoint mid-run under TransientDropout + closed-loop Ada, resume
+    in a FRESH engine, and the continued run matches the uninterrupted one
+    bit-for-bit — parameters AND the controller's transition/event/trace
+    logs (fault realizations are pure fn(seed, step))."""
+    from repro.checkpoint import (
+        load_checkpoint, load_checkpoint_extra, save_checkpoint,
+    )
+
+    total, cut = 12, 6
+
+    # uninterrupted reference
+    sim_a = _resume_sim()
+    state = sim_a.init({"w": jnp.zeros((3,), jnp.float32)})
+    for t in range(total):
+        state, _, _ = sim_a.train_step(state, _batch(t), 0.05)
+    ref_params = np.asarray(state.params["w"])
+    ref_ctl = sim_a.topology.controller.state_dict()
+
+    # interrupted: run to the cut, checkpoint with the engine extra payload
+    sim_b = _resume_sim()
+    state = sim_b.init({"w": jnp.zeros((3,), jnp.float32)})
+    for t in range(cut):
+        state, _, _ = sim_b.train_step(state, _batch(t), 0.05)
+    ckpt = os.path.join(str(tmp_path), "ckpt")
+    save_checkpoint(
+        ckpt, cut, {"p": state.params, "o": state.opt_state},
+        extra=sim_b.snapshot_extra(),
+    )
+    del sim_b, state
+
+    # resumed: a fresh engine restores arrays + extra and continues
+    sim_c = _resume_sim()
+    template = sim_c.init({"w": jnp.zeros((3,), jnp.float32)})
+    restored, step = load_checkpoint(
+        ckpt, {"p": template.params, "o": template.opt_state}
+    )
+    assert step == cut
+    sim_c.restore_extra(load_checkpoint_extra(ckpt))
+    from repro.core.simulator import SimState
+
+    state = SimState(restored["p"], restored["o"], cut)
+    for t in range(cut, total):
+        state, _, _ = sim_c.train_step(state, _batch(t), 0.05)
+
+    np.testing.assert_array_equal(np.asarray(state.params["w"]), ref_params)
+    assert sim_c.topology.controller.state_dict() == ref_ctl
+
+
+def test_checkpoint_extra_roundtrip(tmp_path):
+    from repro.checkpoint import (
+        load_checkpoint, load_checkpoint_extra, save_checkpoint,
+    )
+
+    tree = {"p": jnp.arange(6, dtype=jnp.float32).reshape(2, 3)}
+    extra = {"controller": {"rung": 2}, "last_membership": [True, False]}
+    d = str(tmp_path)
+    save_checkpoint(d, 3, tree, extra=extra)
+    assert load_checkpoint_extra(d) == extra
+    back, step = load_checkpoint(d, tree)
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(back["p"]), np.asarray(tree["p"]))
+    # checkpoints without an extra payload read back as None
+    save_checkpoint(d, 4, tree)
+    assert load_checkpoint_extra(d, 4) is None

@@ -355,8 +355,9 @@ def test_mix_every_advances_time_varying_phase():
     for t in range(3 * period * period):
         b = jax.random.normal(jax.random.PRNGKey(t), (n, 2, 4))
         state, *_ = sim.train_step(state, b, 0.01)
-    mix_keys = [
-        k for k in sim._step_cache if k not in ("__local__", "__centralized__")
+    mix_keys = [  # programless keys are ("__local__"/"__centralized__", n)
+        k for k in sim._step_cache
+        if k[0] not in ("__local__", "__centralized__")
     ]
     assert len(mix_keys) == period, mix_keys
 
@@ -450,7 +451,8 @@ def test_simulator_mix_rounds_single_executable():
             state, jax.random.normal(jax.random.PRNGKey(t), (n, 2, 4)), 0.05
         )
     keys = [
-        k for k in fused_sim._step_cache if k not in ("__local__", "__centralized__")
+        k for k in fused_sim._step_cache
+        if k[0] not in ("__local__", "__centralized__")
     ]
     assert len(keys) == 1, keys
     # numerics: first fused step == grad step then the full one-peer cycle

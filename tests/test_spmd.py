@@ -40,13 +40,25 @@ def test_star_lowers_to_permutes_only():
 @pytest.mark.slow
 def test_fault_injection_matches_simulator():
     """Resilience subsystem: both engines draw the SAME seeded fault
-    realizations (transient dropout; permanent crash + elastic rejoin),
-    agree on final parameters to float32 round-off, compile nothing beyond
-    the pre-enumerated program set, and a transient-fault run's executable
-    count equals the fault-free run's."""
+    realizations (transient dropout; permanent crash + elastic rejoin; a
+    2-node concurrent crash composed over runtime masks; a preemption
+    drain-then-leave), agree on final parameters to float32 round-off,
+    compile nothing beyond the pre-enumerated program set, and transient
+    AND composed-concurrent runs' executable counts equal the fault-free
+    run's."""
     out = _run("faults_spmd_script.py", timeout=900)
     assert "FAULTS_EQUIV_OK" in out
     assert _extract(out, "MAXDIFF") < 5e-5
+
+
+@pytest.mark.slow
+def test_resume_roundtrip_cli():
+    """Crash-consistent resume through the real launcher: an interrupted
+    faulted closed-loop run continued with --resume produces a step-8
+    checkpoint BIT-identical to the uninterrupted run's (arrays + the
+    controller/membership extra payload)."""
+    out = _run("resume_cli_script.py", timeout=900)
+    assert "RESUME_ROUNDTRIP_OK" in out
 
 
 @pytest.mark.slow
