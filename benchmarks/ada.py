@@ -23,6 +23,8 @@ the committed ``BENCH_step_time.json`` ``ada`` section
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 
 from benchmarks.common import Row, save_bench_section, save_json, sweep_topologies
@@ -71,23 +73,43 @@ def _total_comm(
     is the degraded one (its permutes are gone from the wire), and a
     transiently dropped edge moves no payload — at high fault rates a
     naive full-program mask would make dead-edge bytes the dominant term.
+
+    Elastic runs (``fm.elastic``) replay the membership-sized stream: each
+    step is billed the SAME graph family re-derived at that step's
+    membership ``fm.n_at(t)`` (``Topology.resized``, exactly how the
+    engine executes a join), with that step's realization masks — the
+    arrays a grown step draws are sized for the grown n, so the fixed-n
+    replay the pre-elastic version did would either crash or silently
+    bill the stale graph.
     """
     pbytes = _tree_bytes(params0)
-    n = topo.n_nodes
     ctl = topo.controller
     fm = topo.fault_model
+    elastic = fm is not None and fm.elastic
+    sized = {topo.n_nodes: topo}
     total = 0
     for t in range(steps):
         epoch = t // steps_per_epoch
-        if ctl is not None:
+        m = fm.n_at(t) if elastic else topo.n_nodes
+        topo_t = sized.get(m)
+        if topo_t is None:
+            # membership grew mid-run: re-derive the family at the new
+            # size; the resized topology drops the fault model (elastic
+            # realizations are all-ones at grown sizes anyway)
+            topo_t = dataclasses.replace(topo.resized(m), fault_model=None)
+            sized[m] = topo_t
+        if ctl is not None and topo_t is topo:
             with ctl.pinned(ctl.rung_at(t)):
-                prog = topo.program_at(step=t, epoch=epoch)
-            if ctl.should_probe(t):
-                total += int(2 * pbytes * (n - 1) / n)
+                prog = topo_t.program_at(step=t, epoch=epoch)
         else:
-            prog = topo.program_at(step=t, epoch=epoch)
+            # grown membership rebuilds the controller; its rung trace
+            # belongs to the initial n, so the grown steps bill the plain
+            # family schedule
+            prog = topo_t.program_at(step=t, epoch=epoch)
+        if ctl is not None and ctl.should_probe(t):
+            total += int(2 * pbytes * (m - 1) / m)
         if prog is None:  # centralized: gradient all-reduce == complete graph
-            prog = compile_graph(Complete(n))
+            prog = compile_graph(Complete(m))
         if fm is not None:
             fr = fm.at(t)
             if not fr.program_alive.all():

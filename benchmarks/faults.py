@@ -109,10 +109,12 @@ def _run_elastic_one(topo_name: str, fault_kind: str, steps: int, params0, *,
                      n: int = N, fkw=None, mixing: str = "dense",
                      shard_nodes: bool = False, seed: int = 0):
     """One elastic-membership run; like ``_run_one`` but takes the fault
-    model's kwargs verbatim (k, drain_steps, join_steps, ...), sizes each
-    batch by the CURRENT membership (joins grow it mid-run), and skips comm
-    billing (``_total_comm`` replays a fixed-n realization stream, which an
-    elastic run outgrows)."""
+    model's kwargs verbatim (k, drain_steps, join_steps, ...) and sizes
+    each batch by the CURRENT membership (joins grow it mid-run).  Comm
+    billing replays the same membership-sized stream ``_total_comm`` now
+    understands: a grown step is billed the family re-derived at its
+    ``fm.n_at(t)``, so join rows carry honest bytes instead of skipping
+    the column."""
     fkw = dict(fkw or {})
     fm = make_fault_model(fault_kind, n, seed=seed, **fkw)
     topo = make_topology(topo_name, n, fault_model=fm)
@@ -146,6 +148,7 @@ def _run_elastic_one(topo_name: str, fault_kind: str, steps: int, params0, *,
         "acc": acc,
         "xi_trace": xi_trace,
         "us_per_step": float(np.median(step_us)),
+        "comm_bytes_per_node": _total_comm(topo, steps, params0),
         "steps": steps,
         "fault_model": fault_kind if fm is not None else "none",
         # the elastic acceptance bar in artifact form: composed concurrent
@@ -240,6 +243,7 @@ def run_elastic(steps: int = 120, quick: bool = False) -> list[Row]:
             f"elastic/{key}",
             res["us_per_step"],
             f"acc={res['acc']:.3f} xi_final={res['xi_trace'][-1][1]:.3g}"
+            f" comm_MB={res['comm_bytes_per_node'] / 2**20:.1f}"
             f" exec={res['executables']} n_final={res['n_final']}",
         )
         for key, res in payload.items()

@@ -12,6 +12,8 @@ land in benchmarks/results/ and feed EXPERIMENTS.md.
                              joins, n=512 virtual-node shards
   lr_scaling       §3.2      linear vs sqrt LR scaling rescue
   step_time        —         mixing-implementation microbench
+  overlap          —         bucketed overlap-scheduled gossip vs monolithic
+                             (8-host-device subprocess; probe fold included)
 
 Run everything:       PYTHONPATH=src python -m benchmarks.run
 Run one:              PYTHONPATH=src python -m benchmarks.run --only ada
@@ -46,6 +48,7 @@ def main() -> None:
     suites = {
         "comm_cost": lambda: comm_cost.run(quick=args.quick),
         "step_time": lambda: step_time.run(quick=args.quick),
+        "overlap": lambda: step_time.run_overlap(quick=args.quick),
         "accuracy_graphs": lambda: accuracy_graphs.run(
             steps=20 if args.quick else (40 if args.fast else 120),
             scales=(8,) if small else (8, 16),

@@ -54,6 +54,7 @@ __all__ = [
     "gossip_program_update",
     "fused_apply_stacked",
     "fused_apply_shard",
+    "fused_bucket_update",
 ]
 
 
@@ -391,6 +392,76 @@ def fused_apply_stacked(
     if not had_momentum:
         return new_params, ()
     return new_params, _unflatten_stacked(m_new, momentum, sizes)
+
+
+def fused_bucket_update(
+    program,
+    theta_b,    # (n, w_b) one bucket's stacked slice (BucketLayout view)
+    grad_b,     # (n, w_b)
+    mom_b,      # (n, w_b) float32 (zeros when the optimizer is momentum-free)
+    *,
+    lr,
+    beta,
+    fault=None,  # {"update": (n,), "alive": (n,), "link": (n, n)} or None
+    mix_order: str = "post",
+    block: int | None = None,
+    interpret: bool | None = None,
+):
+    """One bucket's fused SGD + gossip round on raw (n, w_b) matrices.
+
+    The bucket boundary is the kernel's *outer dispatch unit*: the engines
+    slice the flattened tree with a ``BucketLayout`` and call this once per
+    bucket, so bucket i's permute-landing gathers and kernel pass carry no
+    data dependency on bucket i+1's — the dispatches pipeline.  Inside,
+    the (node, block) grid of ``gossip_program_update`` runs unchanged over
+    the bucket's width, and each node's (deg+1,) SMEM weight/fault rows are
+    byte-identical across buckets (width never enters them), so the rows
+    are re-selected, never re-built, per bucket.  Skips the pytree
+    flatten/unflatten of ``fused_apply_stacked`` — the layout already did
+    it once for all buckets.  Returns ``(theta_b', mom_b')``.
+    """
+    tables = program.permute_tables()
+    if tables is None:
+        raise ValueError(
+            f"program {program.name!r} is not an all-PPermute single round; "
+            "fused apply supports permute programs only"
+        )
+    srcs, weights = tables
+    interpret = _auto_interpret(interpret)
+    block = _auto_block(block, interpret)
+    n = program.n
+    theta = theta_b
+    g_mat = grad_b
+    m_mat = mom_b.astype(jnp.float32)
+    p = theta.shape[1]
+    block = min(block, max(p, 1))
+    pad = (-p) % block
+    if pad:
+        theta = jnp.pad(theta, ((0, 0), (0, pad)))
+        g_mat = jnp.pad(g_mat, ((0, 0), (0, pad)))
+        m_mat = jnp.pad(m_mat, ((0, 0), (0, pad)))
+
+    lr32 = jnp.asarray(lr, jnp.float32)
+    beta32 = jnp.asarray(beta, jnp.float32)
+    fault_rows = None if fault is None else _fault_rows_stacked(fault, srcs, n)
+    if mix_order == "post":
+        m_wire = beta32 * m_mat + g_mat.astype(jnp.float32)
+        if fault is not None:
+            m_wire = m_wire * fault["update"].astype(jnp.float32)[:, None]
+        wire = (theta.astype(jnp.float32) - lr32 * m_wire).astype(theta.dtype)
+    else:
+        wire = theta
+    nbrs = jnp.take(wire, jnp.asarray(srcs), axis=0)
+
+    out, m_new = gossip_program_update(
+        theta, nbrs, jnp.asarray(weights), g_mat, m_mat,
+        lr=lr32, beta=beta32, fault=fault_rows, block=block,
+        interpret=interpret, mix_order=mix_order,
+    )
+    if pad:
+        out = out[:, :p]
+        m_new = m_new[:, :p]
+    return out, m_new
 
 
 def _flatten_local(tree):

@@ -43,6 +43,7 @@ against the simulator oracle.
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from typing import Any, Callable, Optional
 
 import jax
@@ -138,6 +139,7 @@ class SPMDTrainer:
         hub_balance: bool = False,
         fused_apply: bool = False,
         donate: bool = True,
+        bucket_mb: Optional[float] = None,
     ):
         """mix_every: gossip once every H optimizer steps (local-SGD ×
         decentralized; beyond-paper — the limit of the paper's Obs. 5 that
@@ -161,6 +163,22 @@ class SPMDTrainer:
         AllReduce/GatherRow ops and non-mixing steps keep the interpreter
         path.  Requires plain momentum-SGD (the kernel re-implements the
         update); the dense-interpreter oracle remains the correctness bar.
+
+        bucket_mb: overlap-scheduled gossip — run each mixing step as a
+        chain of per-bucket update+gossip dispatches over a
+        ``core/buckets.BucketLayout`` partition of the flattened parameter
+        vector instead of one monolithic tail (bucket i's permutes carry
+        no data dependency on bucket i+1's compute, so the dispatches
+        pipeline), folding each bucket's Ξ² partial into its pass so
+        fault-free closed-loop probes skip the standalone probe
+        executable.  Composes with ``fused_apply`` (the kernel runs per
+        bucket), ``mix_rounds`` (every stage of the fused round runs
+        inside the same per-bucket dispatch), and fault masks (runtime
+        operands — executables stay one per (program, bucket width), never
+        buckets × faults).  SGD family + ``mix_order="post"`` only;
+        active in the stacked GSPMD realization (the shard_map realization
+        keeps the monolithic step — its per-bucket schedule lives in
+        ``GossipProgram.apply_shard_bucketed`` for manual-axes meshes).
 
         Fault injection rides on the topology (``topology.fault_model``):
         the trainer draws the same seeded realization stream as the
@@ -205,6 +223,25 @@ class SPMDTrainer:
                     f"{optimizer.name}"
                 )
             self._fused_beta = float(hyper.get("momentum", 0.0))
+        self.bucket_mb = bucket_mb
+        if bucket_mb is not None:
+            from repro.core.buckets import bucket_eligible_optimizer
+
+            if not bucket_eligible_optimizer(optimizer):
+                raise ValueError(
+                    "bucket_mb requires an SGD-family optimizer (elementwise "
+                    f"update; got {optimizer.name})"
+                )
+            if topology.centralized:
+                raise ValueError("bucket_mb needs a decentralized topology")
+            if topology.mix_order != "post":
+                raise ValueError(
+                    "bucket_mb requires mix_order='post' (pre-mixing must see "
+                    "the full tree before the update)"
+                )
+        self._bucket_layout = None
+        self._folded_sq = None
+        self._folded_for_step = -1
         self.donate = donate
         self.gossip_axes = gossip_axes_for(cfg.name, mesh)
         self.g = gossip_size(mesh, self.gossip_axes)
@@ -531,6 +568,226 @@ class SPMDTrainer:
             return stacked_step
         return lambda p, o, b, lr: stacked_step(p, o, b, lr)
 
+    # -- bucketed, overlap-scheduled path (stacked realization) ---------------
+    @property
+    def _bucketed(self) -> bool:
+        return (
+            self.bucket_mb is not None
+            and self.g > 1
+            and not self.use_shard_map
+        )
+
+    def _bucket_grads_fn(self, batch: PyTree):
+        """The jitted backward: (loss, grads, norms) — the compute the
+        per-bucket mixing dispatches pipeline behind."""
+        key = "__bucket_grads__"
+        if key not in self._step_cache:
+            gvec = NamedSharding(self.mesh, P(self.gossip_axes))
+
+            def gn(params, batch):
+                loss, grads = jax.vmap(self._grads_of)(params, batch)
+                norms = (
+                    jax.vmap(dbench.param_l2_norms)(params)
+                    if self.collect_norms
+                    else jnp.zeros((self.g, 0), jnp.float32)
+                )
+                return loss, grads, norms
+
+            self._step_cache[key] = jax.jit(
+                gn,
+                in_shardings=(
+                    self.param_shardings,
+                    jax.tree.map(
+                        lambda x: shd.batch_sharding(
+                            self.mesh, self.gossip_axes, len(x.shape),
+                            stacked=True,
+                        ),
+                        batch,
+                    ),
+                ),
+                # grads mirror the parameter tree leaf-for-leaf
+                out_shardings=(gvec, self.param_shardings, gvec),
+            )
+        return self._step_cache[key]
+
+    def _bucket_fn(self, program, width: int, has_m: bool, faulty: bool):
+        """One bucket width's jitted update+mix dispatch, cached per
+        (program, width): all full buckets share one executable, the tail
+        adds at most a second; fault masks ride as runtime operands."""
+        key = ("__bucket__", program.cache_key, width, has_m, faulty)
+        if key not in self._step_cache:
+            from repro.core.buckets import build_bucket_step
+
+            kernel_split = (
+                self._fused_split(program) if self.fused_apply else None
+            )
+            fn = build_bucket_step(
+                program,
+                hyper=self.optimizer.hyper,
+                has_momentum=has_m,
+                faulty=faulty,
+                kernel_split=kernel_split,
+            )
+            lead2 = NamedSharding(self.mesh, P(self.gossip_axes, None))
+            gvec = NamedSharding(self.mesh, P(self.gossip_axes))
+            rep = NamedSharding(self.mesh, P())
+            ins = (
+                [lead2, lead2, rep, gvec]
+                if not has_m
+                else [lead2, lead2, lead2, rep, gvec]
+            )
+            if faulty:
+                ins.append({
+                    "update": rep, "alive": rep,
+                    "link": rep if self.fault_model.has_link_faults else None,
+                })
+            outs = (lead2, lead2, gvec) if has_m else (lead2, gvec)
+            self._step_cache[key] = jax.jit(
+                fn,
+                in_shardings=tuple(ins),
+                out_shardings=outs,
+                donate_argnums=((0, 1) if has_m else (0,)) if self.donate else (),
+            )
+        return self._step_cache[key]
+
+    def _bucket_split_fn(self, state, grads, has_m: bool):
+        """Jitted bucket-view builder: canonical (model-sharded) trees in,
+        (G, w) bucket matrices out.  One executable (not one per leaf):
+        the model-axis gathers the reshapes imply stay INSIDE it, so they
+        are ordered by its data dependencies — loose eager reshapes would
+        each be their own collective-bearing dispatch, outside the token
+        chain (see ``_bucketed_step``), and could interleave differently
+        across devices and deadlock."""
+        key = ("__bucket_split__", has_m)
+        if key not in self._step_cache:
+            layout = self._bucket_layout
+            lead2 = NamedSharding(self.mesh, P(self.gossip_axes, None))
+
+            def split3(params, opt, g):
+                return (
+                    layout.split_stacked(params),
+                    layout.split_stacked(opt) if has_m else [],
+                    layout.split_stacked(g),
+                )
+
+            nb = layout.num_buckets
+            self._step_cache[key] = jax.jit(
+                split3,
+                in_shardings=(
+                    self.param_shardings,
+                    self.opt_shardings if has_m else (),
+                    self.param_shardings,
+                ),
+                out_shardings=(
+                    [lead2] * nb, [lead2] * nb if has_m else [], [lead2] * nb
+                ),
+            )
+        return self._step_cache[key]
+
+    def _bucket_merge_fn(self, state, has_m: bool):
+        """Jitted inverse: bucket matrices back into canonically-sharded
+        trees.  Consumes the Ξ² token, so it is ordered after the last
+        bucket dispatch; passes it through for the probe fold."""
+        key = ("__bucket_merge__", has_m)
+        if key not in self._step_cache:
+            layout = self._bucket_layout
+            lead2 = NamedSharding(self.mesh, P(self.gossip_axes, None))
+            gvec = NamedSharding(self.mesh, P(self.gossip_axes))
+            p_tmpl = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state.params
+            )
+            o_tmpl = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                state.opt_state,
+            )
+            nb = layout.num_buckets
+
+            def merge3(ts, ms, tok):
+                p = layout.merge_stacked(ts, p_tmpl)
+                o = layout.merge_stacked(ms, o_tmpl) if has_m else ()
+                return p, o, tok
+
+            self._step_cache[key] = jax.jit(
+                merge3,
+                in_shardings=(
+                    [lead2] * nb, [lead2] * nb if has_m else [], gvec
+                ),
+                out_shardings=(
+                    self.param_shardings,
+                    self.opt_shardings if has_m else (),
+                    gvec,
+                ),
+            )
+        return self._step_cache[key]
+
+    def _bucketed_step(self, state, batch, lr, program, fault):
+        """One iteration as a pipelined chain of per-bucket dispatches.
+
+        The backward dispatch runs first; a jitted split carves the
+        canonical trees into (G, w) bucket matrices; then each bucket's
+        update + all its gossip rounds + its Ξ² partial launches as its
+        own executable; a jitted merge re-places the canonical trees.
+        The (G,) Ξ² accumulator token is the only cross-bucket operand:
+        it pins a consistent execution order across devices (independent
+        collective-bearing executables can otherwise start in different
+        per-device orders and deadlock at the permute rendezvous), while
+        the (G, w) payloads stay independent, so the runtime overlaps
+        bucket i's collective-permutes with bucket i+1's compute instead
+        of serializing communication behind one monolithic tail.  The
+        dispatch window is bounded (``MAX_INFLIGHT_BUCKETS``): before
+        launching a new bucket the host blocks on the token of the one
+        leaving the window, so fine bucket sizes cannot queue hundreds
+        of collective-bearing launches at once.
+        """
+        from repro.core.buckets import MAX_INFLIGHT_BUCKETS, BucketLayout
+
+        if self._bucket_layout is None:
+            self._bucket_layout = BucketLayout.for_stacked(
+                state.params, self.bucket_mb
+            )
+        layout = self._bucket_layout
+        with _set_mesh(self.mesh):
+            loss, grads, norms = self._bucket_grads_fn(batch)(
+                state.params, batch
+            )
+            has_m = state.opt_state != ()
+            t_mats, m_mats, g_mats = self._bucket_split_fn(state, grads, has_m)(
+                state.params, state.opt_state, grads
+            )
+            lr32 = jnp.float32(lr)
+            gvec = NamedSharding(self.mesh, P(self.gossip_axes))
+            tok = jax.device_put(jnp.zeros((self.g,), jnp.float32), gvec)
+            out_t, out_m = [], []
+            window: deque = deque()
+            for b, w in enumerate(layout.widths):
+                if len(window) >= MAX_INFLIGHT_BUCKETS:
+                    jax.block_until_ready(window.popleft())
+                fn = self._bucket_fn(program, w, has_m, fault is not None)
+                args = (
+                    (t_mats[b], m_mats[b], g_mats[b], lr32, tok)
+                    if has_m
+                    else (t_mats[b], g_mats[b], lr32, tok)
+                )
+                if fault is not None:
+                    args = args + (fault,)
+                res = fn(*args)
+                if has_m:
+                    t2, m2, tok = res
+                    out_m.append(m2)
+                else:
+                    t2, tok = res
+                out_t.append(t2)
+                window.append(tok)
+            new_params, new_opt, tok = self._bucket_merge_fn(state, has_m)(
+                out_t, out_m, tok
+            )
+            if not has_m:
+                new_opt = state.opt_state
+        if fault is None:
+            self._folded_sq = tok
+            self._folded_for_step = state.step + 1
+        return new_params, new_opt, loss, norms
+
     # -- jitted step per program ----------------------------------------------
     def step_fn(self, epoch: int = 0, batch_abstract: Optional[PyTree] = None,
                 *, step: int = 0, mix: bool = True, program_alive=None):
@@ -688,6 +945,13 @@ class SPMDTrainer:
                         state.params,
                         jnp.asarray(np.asarray(fr.alive) != 0, jnp.float32),
                     )
+                elif self._folded_for_step == state.step:
+                    # folded probe: the last bucketed mixing step already
+                    # accumulated each bucket's Ξ² partial in its own
+                    # dispatch — only the final √mean runs, on the host
+                    from repro.core.buckets import xi_from_folded_sq
+
+                    xi = xi_from_folded_sq(self._folded_sq)
                 else:
                     from repro.core.consensus import consensus_distance_jit
 
@@ -703,10 +967,23 @@ class SPMDTrainer:
         # all-ones (base program + runtime masks), so the degraded-program
         # branch — and any extra executable — is never taken
         sel = fr.selection_mask() if fr is not None else None
+        palive = sel if sel is not None and not sel.all() else None
+        if self._bucketed and mix and not self.topology.centralized:
+            program = self._program_at(state.step // self.mix_every, epoch)
+            if program is not None and palive is not None:
+                program = program.degrade(palive)
+            if program is not None:
+                from repro.core.faults import realization_arrays
+
+                fault = realization_arrays(fr) if fr is not None else None
+                p, o, loss, norms = self._bucketed_step(
+                    state, batch, lr, program, fault
+                )
+                return TrainState(p, o, state.step + 1), loss, norms
         fn = self.step_fn(
             epoch, step=state.step // self.mix_every,
             mix=mix or self.topology.centralized,
-            program_alive=(sel if sel is not None and not sel.all() else None),
+            program_alive=palive,
         )
         args = (state.params, state.opt_state, batch, jnp.float32(lr))
         if fr is not None:
@@ -824,6 +1101,13 @@ def main() -> None:
     ap.add_argument("--fused-apply", action="store_true",
                     help="run optimizer+gossip as one fused Pallas pass for "
                          "all-PPermute programs (plain momentum-SGD only)")
+    ap.add_argument("--bucket-mb", type=float, default=None,
+                    help="overlap-scheduled gossip: partition the flattened "
+                         "parameter vector into ~this-many-MiB buckets and "
+                         "pipeline per-bucket update+permute dispatches "
+                         "instead of one monolithic mixing tail (folds the "
+                         "consensus probe into the gossip pass; SGD family "
+                         "+ post-mixing only)")
     ap.add_argument("--fault-model", default="none",
                     choices=["none", "crash", "concurrent", "preempt",
                              "dropout", "link", "straggler"],
@@ -931,6 +1215,7 @@ def main() -> None:
         mixing=args.mixing, mix_every=args.mix_every,
         mix_rounds=args.mix_rounds, hub_balance=args.hub_balance,
         fused_apply=args.fused_apply, donate=False,
+        bucket_mb=args.bucket_mb,
     )
     # report the apply path the step will ACTUALLY take: fused_apply falls
     # back to the interpreter for non-PPermute programs (complete, dense)
@@ -939,6 +1224,8 @@ def main() -> None:
         apply_mode = "fused-pallas"
     elif args.fused_apply:
         apply_mode = "interpreter (program not fused-eligible)"
+    if trainer._bucketed:
+        apply_mode += f" | bucketed {args.bucket_mb}MiB"
     print(topo.describe(), "| mesh", dict(mesh.shape), "| mixing", args.mixing,
           "| engine", "shard_map" if trainer.use_shard_map else "stacked",
           "| rounds", args.mix_rounds, "| apply", apply_mode)

@@ -71,3 +71,33 @@ def test_centralized_billed_as_allreduce():
     topo = make_topology("c_complete", 8)
     per_step = int(2 * P * 7 / 8)  # ring all-reduce bytes per node
     assert _total_comm(topo, 5, PARAMS) == 5 * per_step
+
+
+def test_elastic_join_then_crash_comm_billed_per_membership():
+    """Regression: ``_total_comm`` replayed a fixed-n stream, so an elastic
+    join silently billed the stale pre-join graph for every grown step
+    (and the elastic bench skipped the column entirely).  A join must bill
+    the family re-derived at each step's membership; a crash bills the
+    degraded program from its onset."""
+    from repro.core.faults import make_fault_model
+
+    # join: star(6) for steps 0-1, star(7) from the step-2 join on — the
+    # edge-colored star moves 2(n-1)/n parameter trees per node per step,
+    # so the grown steps are strictly cheaper per node than a fixed-n
+    # replay would claim
+    topo = make_topology(
+        "d_star", 6, fault_model=make_fault_model("join", 6, join_steps=(2,))
+    )
+
+    def star(n):
+        return int(P * 2 * (n - 1) / n)
+
+    assert _total_comm(topo, 4, PARAMS) == 2 * star(6) + 2 * star(7)
+
+    # ...then a crash: the victim's four directed ring links leave the
+    # wire at its seeded onset (2P per step before, 1.5P after)
+    fm = make_fault_model("crash", 8, rate=0.8, seed=1, down_steps=50)
+    topo = make_topology("d_ring", 8, fault_model=fm)
+    onset = next(t for t in range(50) if not fm.at(t).program_alive.all())
+    want = onset * (2 * P) + 3 * int(2 * P * 6 / 8)
+    assert _total_comm(topo, onset + 3, PARAMS) == want

@@ -39,8 +39,13 @@ SCHEMA = {
     "elastic": (
         r"^(d_ring|d_one_peer_exp)/(concurrent\d+|preempt|crash|join|dropout)"
         r"[\d.]*/n\d+$",
-        ("acc", "xi_trace", "us_per_step", "steps", "fault_model",
-         "executables", "n_final"),
+        ("acc", "xi_trace", "us_per_step", "comm_bytes_per_node", "steps",
+         "fault_model", "executables", "n_final"),
+    ),
+    "overlap": (
+        r"^(d_ring|d_star|d_one_peer_exp)/(mono|mb[\d.]+)/n\d+$",
+        ("best_us", "median_us", "p90_us", "probe", "permute_rounds",
+         "bucket_mb", "num_buckets"),
     ),
 }
 
@@ -97,6 +102,38 @@ def test_elastic_section_covers_membership_dynamics(bench):
     assert big, "n=512 virtual-node rows missing"
     for k in big:
         assert bench["elastic"][k]["n_final"] == 512
+
+
+def test_overlap_section_pins_bucketed_win_and_probe_fold(bench):
+    """Overlap-scheduling acceptance in artifact form: every topology has
+    a monolithic row (standalone probe) and a bucket_mb sweep (folded
+    probe), and at the default bucket_mb at least one topology class runs
+    bucketed at or below the monolithic step time — the deep edge-colored
+    schedule is the expected winner; shallow one-permute schedules may
+    honestly pay for their extra dispatches."""
+    from benchmarks.step_time import DEFAULT_BUCKET_MB
+
+    topos = {k.split("/")[0] for k in bench["overlap"]}
+    assert {"d_ring", "d_star", "d_one_peer_exp"} <= topos
+    default_wins = []
+    for topo in sorted(topos):
+        mono = [v for k, v in bench["overlap"].items()
+                if k.startswith(f"{topo}/mono/")]
+        assert len(mono) == 1 and mono[0]["probe"] == "standalone", topo
+        swept = {v["bucket_mb"]: v for k, v in bench["overlap"].items()
+                 if k.startswith(f"{topo}/mb")}
+        assert swept, topo
+        for v in swept.values():
+            assert v["probe"] == "folded" and v["num_buckets"] >= 1
+        at_default = swept.get(DEFAULT_BUCKET_MB)
+        assert at_default is not None, (topo, sorted(swept))
+        default_wins.append(
+            at_default["median_us"] <= mono[0]["median_us"]
+        )
+    assert any(default_wins), (
+        "no topology class runs bucketed <= monolithic at the default "
+        "bucket_mb — the overlap schedule lost its win"
+    )
 
 
 def test_faults_section_covers_three_topology_classes(bench):
