@@ -26,12 +26,26 @@ membership dynamics instead: k>=2 CONCURRENT crashes composed over runtime
 masks (the executables column pins the zero-recompile invariant), a planned
 preemption DRAIN against an unannounced hard crash, a true mid-run JOIN
 growing membership past the initial n, and an n=512 time-varying one-peer
-dropout sweep on virtual-node shards (``shard_nodes=True``).
+dropout sweep on virtual-node shards (``shard_nodes=True``).  PR 8 adds:
+
+  * SPMD-*trainer* rows (``spmd_join``, ``spmd_deadline<rate>``) run in an
+    8-host-device subprocess: a spare-rank pool whose mid-run join
+    activates a ghost rank, and a gossip-deadline straggler sweep with
+    exponential-backoff readmission — both on the production engine, the
+    executables column pinning the zero-recompile bar there too, and
+  * a ``d_ada`` MONOTONE-vs-REDENSIFY pair under the same deadline storm:
+    the non-monotone (Ξ-spike) ladder walks back to a denser rung after
+    each storm, and the committed rows let the schema test assert it wins
+    on accuracy at comparable comm bytes.
 
 Quick tier:  PYTHONPATH=src:. python -m benchmarks.run --quick --only faults
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -106,7 +120,7 @@ def _run_one(topo_name: str, fault_kind: str, rate: float, steps: int,
 
 
 def _run_elastic_one(topo_name: str, fault_kind: str, steps: int, params0, *,
-                     n: int = N, fkw=None, mixing: str = "dense",
+                     n: int = N, fkw=None, tkw=None, mixing: str = "dense",
                      shard_nodes: bool = False, seed: int = 0):
     """One elastic-membership run; like ``_run_one`` but takes the fault
     model's kwargs verbatim (k, drain_steps, join_steps, ...) and sizes
@@ -117,7 +131,7 @@ def _run_elastic_one(topo_name: str, fault_kind: str, steps: int, params0, *,
     the column."""
     fkw = dict(fkw or {})
     fm = make_fault_model(fault_kind, n, seed=seed, **fkw)
-    topo = make_topology(topo_name, n, fault_model=fm)
+    topo = make_topology(topo_name, n, fault_model=fm, **dict(tkw or {}))
     sim = DecentralizedSimulator(
         mini_resnet_loss, sgd(momentum=0.9), topo, mixing=mixing,
         shard_nodes=shard_nodes, collect_norms=False,
@@ -144,7 +158,7 @@ def _run_elastic_one(topo_name: str, fault_kind: str, steps: int, params0, *,
                 consensus_distance_masked_jit(state.params, mask)
             )])
     acc = float(_eval_fn(state.mean_params()))
-    return {
+    out = {
         "acc": acc,
         "xi_trace": xi_trace,
         "us_per_step": float(np.median(step_us)),
@@ -156,6 +170,100 @@ def _run_elastic_one(topo_name: str, fault_kind: str, steps: int, params0, *,
         "executables": len(sim._step_cache),
         "n_final": sim.n,
     }
+    if topo.controller is not None:
+        ctl = topo.controller
+        out["controller"] = {
+            "transitions": [list(t) for t in ctl.transitions],
+            "events": [list(e) for e in ctl.events],
+            "ladder": list(ctl.ladder),
+        }
+    return out
+
+
+def _spmd_worker(quick: bool) -> dict:
+    """Body of the 8-host-device subprocess: elastic rows on the PRODUCTION
+    engine.  A spare-rank pool (one ghost rank activated by a mid-run join)
+    and a gossip-deadline straggler sweep, both on a fixed (4, 2) mesh —
+    the ``executables`` column pins the zero-recompile bar on the trainer
+    exactly as the simulator rows pin it on the oracle."""
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.data import SyntheticLM
+    from repro.launch.mesh import make_mesh
+    from repro.launch.train import SPMDTrainer
+    from repro.models import transformer as tfm
+
+    G = 4
+    steps = 8 if quick else 24
+    cfg = dataclasses.replace(
+        get_config("granite-8b-reduced"), name="granite-8b",
+        dtype=jnp.float32, remat=False,
+    )
+    mesh = make_mesh((G, 2), ("data", "model"))
+    src = SyntheticLM(vocab=cfg.vocab, seq_len=16, seed=0)
+    node_params = tfm.init_model(cfg, jax.random.PRNGKey(0), tp_size=2)
+    payload = {}
+    cases = [
+        ("spmd_join", "join",
+         dict(seed=5, join_steps=(steps // 2,), spare_ranks=1)),
+        ("spmd_deadline0.3", "deadline", dict(seed=4, rate=0.3)),
+        ("spmd_deadline0.6", "deadline", dict(seed=4, rate=0.6)),
+    ]
+    for label, kind, fkw in cases:
+        fm = make_fault_model(kind, G, **fkw)
+        topo = make_topology("d_ring", G, fault_model=fm)
+        trainer = SPMDTrainer(cfg, mesh, topo, sgd(momentum=0.9), donate=False)
+        state = trainer.init_state(jax.random.PRNGKey(0))
+        step_us, xi_trace = [], []
+        loss = None
+        for t in range(steps):
+            batch = {
+                k: jnp.asarray(v) for k, v in src.stacked(G, t, 2).items()
+            }
+            t0 = time.perf_counter()
+            state, loss, _ = trainer.train_step(state, batch, 0.05, epoch=0)
+            jax.block_until_ready(loss)
+            step_us.append(1e6 * (time.perf_counter() - t0))
+            if t % 2 == 0:
+                mask = jnp.asarray(
+                    np.asarray(fm.at(t).alive) != 0, jnp.float32
+                )
+                xi_trace.append([t, float(
+                    consensus_distance_masked_jit(state.params, mask)
+                )])
+        payload[f"d_ring/{label}/n{G}"] = {
+            # the trainer rows train a transformer LM, not the mini-resnet
+            # classifier — the figure of merit is the final mean loss
+            "final_loss": float(np.mean(jax.device_get(loss))),
+            "xi_trace": xi_trace,
+            "us_per_step": float(np.median(step_us)),
+            "comm_bytes_per_node": _total_comm(topo, steps, node_params),
+            "steps": steps,
+            "fault_model": kind,
+            "executables": len(trainer._step_cache),
+            "n_final": G,
+            "deadline_overruns": trainer.deadline_overruns,
+        }
+    return payload
+
+
+def _run_spmd_rows(quick: bool) -> dict:
+    """Spawn ``_spmd_worker`` in a subprocess so the 8-device host-platform
+    flag never leaks into the in-process sections' timings."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["JAX_PLATFORMS"] = "cpu"
+    cmd = [sys.executable, "-m", "benchmarks.faults", "--spmd-worker"]
+    if quick:
+        cmd.append("--quick")
+    r = subprocess.run(
+        cmd, capture_output=True, text=True, timeout=1800, env=env,
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+    )
+    if r.returncode != 0:
+        raise RuntimeError(f"spmd elastic worker failed:\n{r.stderr[-3000:]}")
+    return json.loads(r.stdout)
 
 
 def run(steps: int = 120, quick: bool = False) -> list[Row]:
@@ -238,11 +346,34 @@ def run_elastic(steps: int = 120, quick: bool = False) -> list[Row]:
             "d_one_peer_exp", "dropout", steps512, params0, n=512,
             fkw=dict(rate=rate), mixing="shift", shard_nodes=True, seed=3,
         )
+    # monotone vs Ξ-spike re-densify under the SAME deadline storm: the
+    # closed-loop ladder that can walk back up to a denser rung after each
+    # storm should buy averaged-model accuracy the monotone ladder cannot,
+    # at comparable comm bytes (both replay their realized rung schedule).
+    # These two rows need enough steps for the ladder to actually descend
+    # (first down-fire lands ~step 21 at target 0.4) and then meet a
+    # readmission Ξ-spike, so they run 60 steps even in the quick tier;
+    # spike=1.3 sits above post-transition noise (~1.36x phase peak on
+    # straggler readmission) while still firing within the run.
+    ladder_steps = max(steps, 60)
+    for label, tkw in (
+        ("monotone", dict(k0=6, consensus_target=0.4)),
+        ("redensify", dict(k0=6, consensus_target=0.4, consensus_spike=1.3)),
+    ):
+        payload[f"d_ada/{label}/n{N}"] = _run_elastic_one(
+            "d_ada", "deadline", ladder_steps, params0,
+            fkw=dict(rate=0.5, deadline_ms=30.0), tkw=tkw, seed=4,
+        )
+    # production-engine rows (8-host-device subprocess): spare-pool join
+    # activation + deadline straggler sweep on the SPMD trainer
+    payload.update(_run_spmd_rows(quick))
     rows = [
         Row(
             f"elastic/{key}",
             res["us_per_step"],
-            f"acc={res['acc']:.3f} xi_final={res['xi_trace'][-1][1]:.3g}"
+            (f"acc={res['acc']:.3f}" if "acc" in res
+             else f"loss={res['final_loss']:.3f}")
+            + f" xi_final={res['xi_trace'][-1][1]:.3g}"
             f" comm_MB={res['comm_bytes_per_node'] / 2**20:.1f}"
             f" exec={res['executables']} n_final={res['n_final']}",
         )
@@ -251,3 +382,11 @@ def run_elastic(steps: int = 120, quick: bool = False) -> list[Row]:
     save_json("elastic", payload)
     save_bench_section("elastic", payload)
     return rows
+
+
+if __name__ == "__main__":
+    if "--spmd-worker" in sys.argv:
+        print(json.dumps(_spmd_worker(quick="--quick" in sys.argv)))
+    else:
+        sys.exit("usage: python -m benchmarks.faults --spmd-worker [--quick]"
+                 "  (sections run via benchmarks.run)")

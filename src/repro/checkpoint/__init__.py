@@ -1,3 +1,4 @@
 from repro.checkpoint.ckpt import (
     save_checkpoint, load_checkpoint, load_checkpoint_extra, latest_step,
+    validate_run_config,
 )

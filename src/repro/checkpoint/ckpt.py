@@ -19,7 +19,7 @@ PyTree = Any
 
 __all__ = [
     "save_checkpoint", "load_checkpoint", "load_checkpoint_extra",
-    "latest_step",
+    "latest_step", "validate_run_config",
 ]
 
 _SEP = "/"
@@ -101,6 +101,47 @@ def load_checkpoint(directory: str, template: PyTree, step: int | None = None) -
             )
         leaves.append(arr)
     return jax.tree_util.tree_unflatten(treedef, leaves), step
+
+
+def validate_run_config(
+    recorded: dict, *, topology: str, bucket_mb: float | None,
+    n: int | None = None, n_label: str = "node count",
+) -> None:
+    """Fail-fast resume: compare a checkpoint's recorded ``run_config``
+    against the resuming run's configuration.
+
+    A mismatched resume (different topology, bucket layout, or — for the
+    fixed-mesh trainer — gossip size) would otherwise surface as an opaque
+    leaf-shape or tree-structure error mid-restore, or worse, silently
+    change the mixing semantics.  Raises a ``ValueError`` naming BOTH the
+    checkpointed and the configured value.  Checkpoints written before
+    ``run_config`` existed (empty dict) skip the check.
+    """
+    if not recorded:
+        return
+    ck_topo = recorded.get("topology")
+    if ck_topo is not None and str(ck_topo) != str(topology):
+        raise ValueError(
+            f"resume config mismatch: checkpoint was written with topology "
+            f"{ck_topo!r} but this run is configured with {topology!r}"
+        )
+    if "bucket_mb" in recorded:
+        ck_mb = recorded["bucket_mb"]
+        ours = None if bucket_mb is None else float(bucket_mb)
+        if (ck_mb is None) != (ours is None) or (
+            ck_mb is not None and float(ck_mb) != ours
+        ):
+            raise ValueError(
+                f"resume config mismatch: checkpoint was written with "
+                f"bucket_mb={ck_mb} but this run is configured with "
+                f"bucket_mb={ours}"
+            )
+    ck_n = recorded.get("n")
+    if n is not None and ck_n is not None and int(ck_n) != int(n):
+        raise ValueError(
+            f"resume config mismatch: checkpoint was written with "
+            f"{n_label} {int(ck_n)} but this run is configured with {int(n)}"
+        )
 
 
 def load_checkpoint_extra(directory: str, step: int | None = None) -> dict | None:

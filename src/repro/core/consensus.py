@@ -184,11 +184,23 @@ class ConsensusController:
         the target on the last lattice rung, not at the open-loop ``k < 2``
         constant.
 
-    The rung walk is monotone (never re-densifies) and bounded by the
+    By default the rung walk is monotone (never re-densifies).  Passing
+    ``spike`` (a ratio > 1) makes the ladder NON-monotone: a measured Ξ_t
+    at or above ``spike`` × the phase's running peak — a crash, a deadline
+    storm, a join landing — walks the ladder back UP one rung to a denser
+    graph (logged as a ``"redensify"`` event and a transition), because a
+    disagreement spike is exactly when the run needs MORE connectivity,
+    not the sparser graph the stale monotone walk would keep.  The spike
+    reference survives ``rearm`` (a membership event clears the trigger
+    reference Ξ_0 *before* the spiked probe arrives — the spike must still
+    compare against the pre-fault level); after a re-densify the phase
+    re-seeds at the spiked level, so a single event moves at most one rung
+    and the loop cannot thrash.  Either way the walk is bounded by the
     ladder, so the executable set an engine needs is exactly the ladder's
     programs — ``Topology.distinct_programs`` enumerates them by pinning
     each rung in turn (``pinned``), and engines cache one executable per
-    program as for open-loop Ada.
+    program as for open-loop Ada: re-densification only ever *re-selects*
+    an already-enumerated denser rung.
 
     Mutable by design (training-run state); ``reset()`` re-arms it for a
     fresh run, ``rung_at(step)`` replays the realized schedule afterwards
@@ -198,6 +210,7 @@ class ConsensusController:
     schedule: AdaSchedule
     target: float = 0.5      # trigger ratio Ξ_t / Ξ_0 (2102.04828's fraction)
     probe_every: int = 1     # probe cadence in raw training steps
+    spike: Optional[float] = None  # Ξ_t / peak ratio that re-densifies (>1)
 
     # -- run state (mutated by observe) -------------------------------------
     xi0: Optional[float] = None
@@ -209,7 +222,15 @@ class ConsensusController:
     def __post_init__(self):
         if not (0.0 < self.target < 1.0):
             raise ValueError(f"target must be in (0, 1), got {self.target}")
+        if self.spike is not None and not float(self.spike) > 1.0:
+            raise ValueError(
+                f"spike is a re-densify ratio and must be > 1, got {self.spike}"
+            )
         self.probe_every = max(int(self.probe_every), 1)
+        # the re-densify reference: the current phase's peak Ξ, persisted
+        # through rearm() (unlike xi0) so a membership event cannot hide
+        # the very spike it causes from the spike trigger
+        self._spike_ref: Optional[float] = None
         n = self.schedule.n_nodes
         floor = (
             2
@@ -270,9 +291,37 @@ class ConsensusController:
         transition) seeds it, later larger observations raise it.  A
         transition fires iff ``xi <= target * Ξ_0`` with a sparser rung
         available; firing re-arms the reference for the new phase.  At most
-        one rung step per observation — the walk is monotone.
+        one rung step per observation.
+
+        With ``spike`` set the walk is non-monotone: before anything else,
+        ``xi >= spike * peak`` (the phase peak persisted through ``rearm``)
+        with a denser rung available walks the ladder UP one rung, logs a
+        ``"redensify"`` event, and re-seeds the phase at the spiked level
+        — so the same event cannot fire twice, and once Ξ recovers below
+        ``target`` × the spiked reference the normal trigger re-sparsifies
+        (the loop heals the spike, then resumes the walk).
         """
         xi = float(xi)
+        if (
+            self.spike is not None
+            and self.rung > 0
+            and math.isfinite(xi)
+            and self._spike_ref is not None
+            and xi >= float(self.spike) * self._spike_ref
+        ):
+            self.rung -= 1
+            self.transitions.append((int(step), self.rung))
+            self._log_event(step, "redensify")
+            # re-seed the phase on the denser rung at the spiked level:
+            # both references restart, so this spike is consumed
+            self.xi0 = None
+            self._spike_ref = None
+            self.trace.append((int(step), xi, self.rung))
+            return False
+        if xi > 0.0 and math.isfinite(xi):
+            self._spike_ref = (
+                xi if self._spike_ref is None else max(self._spike_ref, xi)
+            )
         if self.xi0 is None:
             if xi > 0.0 and math.isfinite(xi):
                 self.xi0 = xi
@@ -289,6 +338,7 @@ class ConsensusController:
             self.rung += 1
             self.transitions.append((int(step), self.rung))
             self.xi0 = None  # re-arm the phase reference on the new rung
+            self._spike_ref = None  # sparser graphs run hotter: new baseline
         self.trace.append((int(step), xi, self.rung))
         return fired
 
@@ -310,9 +360,18 @@ class ConsensusController:
         step (Ξ_0 is already cleared), and k duplicate entries would make
         the event log overstate distinct membership phases k-fold.
         Distinct same-step reasons merge into one ``"a+b"`` entry.
+
+        The spike reference deliberately SURVIVES re-arming: the membership
+        event fires before the spiked probe it causes, so clearing it here
+        would blind the ``spike`` re-densify trigger to exactly the spikes
+        it exists for.
         """
-        step = int(step)
         self.xi0 = None
+        self._log_event(step, reason)
+
+    def _log_event(self, step: int, reason: str) -> None:
+        """Append to ``events``, coalescing same-step reasons into "a+b"."""
+        step = int(step)
         if self.events and self.events[-1][0] == step:
             prev = self.events[-1][1]
             if str(reason) not in prev.split("+"):
@@ -325,6 +384,7 @@ class ConsensusController:
         """JSON-serializable run state (for crash-consistent resume)."""
         return {
             "xi0": self.xi0,
+            "spike_ref": self._spike_ref,
             "rung": int(self.rung),
             "transitions": [[int(s), int(r)] for s, r in self.transitions],
             "trace": [[int(s), float(x), int(r)] for s, x, r in self.trace],
@@ -335,6 +395,9 @@ class ConsensusController:
         """Restore ``state_dict`` output — resumed runs continue the same
         phase reference, rung walk, and logs as the uninterrupted run."""
         self.xi0 = None if d.get("xi0") is None else float(d["xi0"])
+        self._spike_ref = (
+            None if d.get("spike_ref") is None else float(d["spike_ref"])
+        )
         self.rung = min(int(d["rung"]), len(self._ladder) - 1)
         self.transitions[:] = [(int(s), int(r)) for s, r in d["transitions"]]
         self.trace[:] = [
@@ -358,6 +421,7 @@ class ConsensusController:
     def reset(self) -> None:
         """Re-arm for a fresh run (clears Ξ_0, rung, and the trace)."""
         self.xi0 = None
+        self._spike_ref = None
         self.rung = 0
         self.transitions.clear()
         self.trace.clear()
@@ -405,7 +469,8 @@ class ConsensusController:
 
     def describe(self) -> str:
         ks = ",".join(str(r) for r in self._ladder)
+        sp = "" if self.spike is None else f", spike={self.spike}"
         return (
             f"ConsensusController(target={self.target}, "
-            f"probe_every={self.probe_every}, ladder=[{ks}])"
+            f"probe_every={self.probe_every}{sp}, ladder=[{ks}])"
         )

@@ -374,6 +374,7 @@ def make_topology(
     adjacency: Any = None,
     consensus_target: float | None = None,
     consensus_probe_every: int = 1,
+    consensus_spike: float | None = None,
     fault_model: FaultModel | None = None,
 ) -> Topology:
     """Build one of the benchmarked topologies.
@@ -391,7 +392,9 @@ def make_topology(
         and one-peer handoff from the measured consensus-distance ratio
         Ξ_t/Ξ_0 crossing this target (arXiv:2102.04828) instead of the
         open-loop epoch law.  ``consensus_probe_every`` sets the probe
-        cadence in training steps.
+        cadence in training steps.  ``consensus_spike`` (a ratio > 1) makes
+        the ladder non-monotone: a Ξ_t spike at or past ``spike`` × the
+        phase peak (crash, deadline storm, join) re-densifies one rung.
       fault_model: seeded fault injection (``core/faults.make_fault_model``)
         both engines consume identically; decentralized only — the
         centralized all-reduce has no per-node degradation semantics.
@@ -401,6 +404,11 @@ def make_topology(
     if consensus_target is not None and name != "d_ada":
         raise ValueError(
             f"consensus_target is a d_ada (closed-loop Ada) option; got {name!r}"
+        )
+    if consensus_spike is not None and consensus_target is None:
+        raise ValueError(
+            "consensus_spike re-densifies the closed loop and requires "
+            "consensus_target"
         )
     if fault_model is not None:
         if name == "c_complete":
@@ -420,6 +428,7 @@ def make_topology(
             k=k, k0=k0, gamma_k=gamma_k, k_floor=k_floor, seed=seed,
             pool=pool, mix_order=mix_order, consensus_target=consensus_target,
             consensus_probe_every=consensus_probe_every,
+            consensus_spike=consensus_spike,
         )),
     )
     if name == "c_complete":
@@ -457,6 +466,7 @@ def make_topology(
                 schedule=sched,
                 target=consensus_target,
                 probe_every=consensus_probe_every,
+                spike=consensus_spike,
             )
             if consensus_target is not None
             else None

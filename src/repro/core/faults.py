@@ -43,6 +43,41 @@ Fault classes (``make_fault_model``):
     topology re-derives its graph family at the new n
     (``Topology.resized``); programs for every pre-declared size are
     enumerable up front, so joins never recompile beyond that set.
+  * ``deadline``  — per-round gossip deadline with exponential-backoff
+    readmission (arXiv:2506.00961's graceful degradation): each node draws
+    a seeded lognormal round latency; a node that misses ``deadline_ms``
+    is masked out of THAT round's gossip (neighbors renormalize onto self)
+    but keeps its local optimizer step — the round degrades to partial
+    participation with a local-step fallback instead of stalling on the
+    straggler.  A miss additionally benches the node for 1, 2, 4, …
+    rounds (``backoff``), so a persistently slow node is readmitted at
+    exponentially growing intervals instead of thrashing the deadline
+    every round; an on-time round resets its backoff.  Masks ride the
+    runtime fault row — zero extra executables — and ``program_alive``
+    stays all-ones: a deadline miss is transient, not a membership event
+    (the Ξ_t drift from locally-stepping nodes is what the controller's
+    spike re-densification reacts to).  The mask-driving latencies are
+    seeded (pure fn(seed, step)), which keeps both engines bit-identical
+    and resumes exact; the engines additionally record *measured*
+    wall-clock round durations as an observational trace
+    (``round_ms`` / ``deadline_overruns``).
+  * ``spare``     — over-provisioned spare-rank pool (``SparePool``): the
+    gossip mesh is built at ``n = n_active + spares`` and the spare ranks
+    ride from step 0 as alive-masked zero-weight *ghosts* — their edges
+    carry weight 0, the mass renormalizes onto the active receivers'
+    self weight, and the ghost's own row degrades to the identity
+    (exactly ``degraded_matrix`` with the ghost mask, so activating a
+    spare compiles ZERO extra executables: ``select_alive`` stays
+    all-ones and every realization rides the base program's runtime
+    fault row).  Wrapping an (inner) ``join`` model maps each
+    pre-declared join onto a spare activation: at the join step the spare
+    flips alive, adopts its neighbors' average (the ``rejoin`` path ==
+    ``admit_node`` semantics without growing any array), and the
+    membership-key change re-arms the controller — true elasticity on a
+    FIXED device mesh, which is why (unlike ``join``) a spare pool runs
+    on the SPMD trainer.  Any non-elastic inner model (deadline,
+    preempt, crash, dropout, …) composes: its realization occupies the
+    active ranks while the ghosts pad the rest.
   * ``dropout``   — transient node dropout: per-step i.i.d. Bernoulli(rate)
     per node.  A dropped node skips this round's gossip (its row degrades
     to identity, its neighbors renormalize onto self) but still takes its
@@ -94,11 +129,13 @@ __all__ = [
     "ConcurrentCrash",
     "FaultModel",
     "FaultRealization",
+    "GossipDeadline",
     "Join",
     "LinkFailure",
     "NoFaults",
     "PermanentCrash",
     "Preemption",
+    "SparePool",
     "Straggler",
     "TransientDropout",
     "admit_node",
@@ -598,9 +635,241 @@ class Straggler(FaultModel):
         )
 
 
+@dataclasses.dataclass(frozen=True)
+class GossipDeadline(FaultModel):
+    """Per-round gossip deadline with exponential-backoff readmission.
+
+    Each (node, step) draws a lognormal round latency
+    ``mean_ms · exp(sigma · Z)``; with probability ``rate`` the node
+    additionally suffers a straggler spike (``spike_mult``× the draw).  A
+    node whose latency exceeds ``deadline_ms`` MISSES the round: it is
+    masked out of gossip (``alive = 0`` — its neighbors renormalize onto
+    self, its own row degrades to identity) but keeps its local optimizer
+    step (``update = 1``) — graceful degradation to partial participation
+    with a local-step fallback (arXiv:2506.00961) instead of the whole
+    round stalling on the straggler.
+
+    Readmission is under exponential backoff: a fresh miss benches the
+    node for ``penalty`` further rounds (masked out, still local-stepping)
+    and multiplies the penalty by ``backoff`` (1, 2, 4, … up to
+    ``backoff_cap``); an on-time *participated* round resets the penalty
+    to 1.  This prevents a persistently slow node from thrashing the
+    deadline every round while guaranteeing it is re-probed at growing
+    intervals.
+
+    The timeline is a pure function of ``(seed, step)``: it is replayed
+    incrementally from step 0 and cached, so out-of-order queries and
+    resumed runs see the identical stream (the backoff state machine is
+    deterministic given the seeded latency draws).  ``program_alive``
+    stays all-ones — a miss is transient, never a membership event — and
+    all masks are runtime fault-row values: zero extra executables.
+
+    The seeded latencies stand in for wall-clock measurement so both
+    engines and any resume stay bit-identical; the engines separately
+    record measured wall-clock round durations (``round_ms``) and count
+    overruns against this same ``deadline_ms`` as an observational trace.
+    """
+
+    name: str = "deadline"
+    deadline_ms: float = 30.0
+    mean_ms: float = 20.0
+    sigma: float = 0.25
+    spike_mult: float = 10.0
+    backoff: float = 2.0
+    backoff_cap: int = 64
+
+    def __post_init__(self):
+        super().__post_init__()
+        if not float(self.deadline_ms) > 0.0:
+            raise ValueError(f"deadline_ms must be > 0, got {self.deadline_ms}")
+        if not 0.0 < float(self.mean_ms):
+            raise ValueError(f"mean_ms must be > 0, got {self.mean_ms}")
+        if not float(self.backoff) >= 1.0:
+            raise ValueError(f"backoff must be >= 1, got {self.backoff}")
+        if int(self.backoff_cap) < 1:
+            raise ValueError(
+                f"backoff_cap must be >= 1, got {self.backoff_cap}"
+            )
+        # incremental replay cache: _participates[t] is the (n,) bool mask
+        # of nodes that made round t; the penalty/suspension state machine
+        # advances with it (deterministic given the seeded draws, so two
+        # same-seed instances — or a resume — replay the identical stream)
+        object.__setattr__(self, "_participates", [])
+        object.__setattr__(self, "_penalty", np.ones(self.n))
+        object.__setattr__(self, "_suspend", np.zeros(self.n, dtype=np.int64))
+
+    def latency_ms(self, step: int) -> np.ndarray:
+        """The seeded per-node round latency draw for ``step`` (ms)."""
+        r = _rng(self.seed, step, salt=108)
+        base = self.mean_ms * np.exp(self.sigma * r.standard_normal(self.n))
+        spiked = r.random(self.n) < self.rate
+        return np.where(spiked, base * self.spike_mult, base)
+
+    def _advance_to(self, step: int) -> None:
+        while len(self._participates) <= step:
+            t = len(self._participates)
+            miss = self.latency_ms(t) > self.deadline_ms
+            benched = self._suspend > 0
+            part = ~(miss | benched)
+            self._suspend[benched] -= 1
+            # a fresh miss (not already benched) earns a sit-out window of
+            # the current penalty, then the penalty grows geometrically
+            fresh = miss & ~benched
+            self._suspend[fresh] += np.round(self._penalty[fresh]).astype(
+                np.int64
+            )
+            self._penalty[fresh] = np.minimum(
+                self._penalty[fresh] * self.backoff, float(self.backoff_cap)
+            )
+            self._penalty[part] = 1.0  # on-time round: backoff resets
+            self._participates.append(part)
+
+    def at(self, step: int) -> FaultRealization:
+        self._advance_to(step)
+        ones = self._ones()
+        return FaultRealization(
+            alive=self._participates[step].copy(),
+            update=ones,  # local-step fallback: a benched node keeps training
+            program_alive=ones.copy(),
+        )
+
+    def describe(self) -> str:
+        return (
+            f"{self.name}(n={self.n}, rate={self.rate}, seed={self.seed}, "
+            f"deadline_ms={self.deadline_ms}, backoff={self.backoff})"
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class SparePool(FaultModel):
+    """Over-provisioned spare-rank pool: elastic membership on a FIXED mesh.
+
+    ``n`` is the FULL gossip size the mesh (and topology) is built at;
+    the last ``spares`` ranks ride from step 0 as alive-masked, zero-weight
+    *ghosts*: their ``alive``/``update`` masks are 0, so ``degraded_matrix``
+    renormalizes their edge mass onto the active receivers' self weight and
+    degrades each ghost's own row to the identity — a zero-weight
+    participant whose replica stays frozen at init.  ``select_alive`` is
+    ALWAYS all-ones and ``program_masks`` is empty: every realization —
+    ghosts, inner faults, activations — rides the base program's runtime
+    fault row, so a spare pool compiles exactly as many executables as the
+    fault-free run (the invariant ``tests/faults_spmd_script.py`` pins).
+
+    ``inner`` is an optional fault model over the ``n - spares`` initially
+    active ranks.  A ``Join`` inner turns pre-declared joins into spare
+    ACTIVATIONS: inner join i lands on outer rank ``(n - spares) + i``,
+    surfaced through ``rejoin`` — the engines' existing rejoin path adopts
+    the spare's state from its alive neighbors' average (``admit_node``
+    semantics without growing any array) and the membership-key flip
+    re-arms the consensus controller.  Non-elastic inners (deadline,
+    preempt, crash, dropout, link, straggler) compose unchanged on the
+    active ranks; an inner's own pre-enumerated program masks are
+    deliberately dropped — the pool forces the composed runtime-mask
+    execution for everything.
+
+    The pool itself is NOT elastic (membership never exceeds ``n``), which
+    is exactly why — unlike ``join`` — it runs on the SPMD trainer.
+    """
+
+    name: str = "spare"
+    spares: int = 1
+    inner: Optional[FaultModel] = None
+
+    def __post_init__(self):
+        super().__post_init__()
+        if not 1 <= int(self.spares) < self.n:
+            raise ValueError(
+                f"spare pool needs 1 <= spares < n, got spares={self.spares}, "
+                f"n={self.n}"
+            )
+        n0 = self.n - int(self.spares)
+        if self.inner is not None:
+            if isinstance(self.inner, SparePool):
+                raise ValueError("spare pools do not nest")
+            if self.inner.n != n0:
+                raise ValueError(
+                    f"inner fault model covers {self.inner.n} nodes but the "
+                    f"pool has {n0} initially-active ranks "
+                    f"(n={self.n} - spares={self.spares})"
+                )
+            if self.inner.elastic:
+                js = getattr(self.inner, "join_steps", ())
+                if len(js) > int(self.spares):
+                    raise ValueError(
+                        f"{len(js)} pre-declared joins exceed the "
+                        f"{self.spares} spare rank(s)"
+                    )
+
+    @property
+    def n_active0(self) -> int:
+        """Initially-active rank count (the inner model's n)."""
+        return self.n - int(self.spares)
+
+    @property
+    def has_link_faults(self) -> bool:
+        return self.inner is not None and self.inner.has_link_faults
+
+    @property
+    def deadline_ms(self) -> Optional[float]:
+        """The inner deadline (ms) when wrapping a ``GossipDeadline``."""
+        return getattr(self.inner, "deadline_ms", None)
+
+    def activation_steps(self) -> tuple[int, ...]:
+        """Steps at which a spare activates (the inner join schedule)."""
+        if self.inner is not None and self.inner.elastic:
+            return tuple(self.inner.join_steps)
+        return ()
+
+    def at(self, step: int) -> FaultRealization:
+        n0 = self.n_active0
+        if self.inner is None:
+            m = n0
+            ones = np.ones(m, dtype=bool)
+            base = FaultRealization(
+                alive=ones, update=ones.copy(), program_alive=ones.copy()
+            )
+        else:
+            base = self.inner.at(step)
+            m = len(base.program_alive)  # grows as inner joins land
+        base_alive = np.asarray(base.alive)
+        alive = np.zeros(self.n, dtype=base_alive.dtype)  # ghosts: 0
+        alive[:m] = base_alive
+        update = np.zeros(self.n, dtype=bool)  # ghosts: frozen at init
+        update[:m] = base.update
+        palive = np.zeros(self.n, dtype=bool)  # drives membership_key/rearm
+        palive[:m] = base.program_alive
+        link = None
+        if base.link_up is not None:
+            link = np.ones((self.n, self.n), dtype=bool)
+            link[:m, :m] = base.link_up
+        return FaultRealization(
+            alive=alive,
+            update=update,
+            program_alive=palive,
+            link_up=link,
+            # inner joins become spare activations at the SAME index: the
+            # rejoin path adopts the spare's row from its alive neighbors
+            rejoin=tuple(base.rejoin) + tuple(base.joins),
+            depart=tuple(base.depart),
+            # zero-recompile invariant: the base program + runtime fault
+            # row realize every ghost/inner degradation (never select a
+            # degraded program, never enumerate one)
+            select_alive=np.ones(self.n, dtype=bool),
+        )
+
+    def program_masks(self):
+        return ()
+
+    def describe(self) -> str:
+        inner = "none" if self.inner is None else self.inner.describe()
+        return (
+            f"{self.name}(n={self.n}, spares={self.spares}, inner={inner})"
+        )
+
+
 FAULT_MODELS = (
-    "none", "crash", "concurrent", "preempt", "join", "dropout", "link",
-    "straggler",
+    "none", "crash", "concurrent", "preempt", "join", "deadline", "dropout",
+    "link", "straggler",
 )
 
 
@@ -616,6 +885,10 @@ def make_fault_model(
     boost: float = 1.5,
     join_steps: Optional[tuple[int, ...]] = None,
     enumerate_programs: bool = False,
+    spare_ranks: int = 0,
+    deadline_ms: float = 30.0,
+    deadline_mean_ms: float = 20.0,
+    deadline_backoff: float = 2.0,
 ) -> Optional[FaultModel]:
     """Factory: ``make_fault_model("dropout", 16, rate=0.05, seed=3)``.
 
@@ -625,9 +898,31 @@ def make_fault_model(
     (``k`` victims, overlapping windows; ``enumerate_programs`` switches
     from the composed runtime-mask default to the bounded pre-enumerated
     degraded-program fast path), ``preempt`` (``drain_steps`` of ``boost``-
-    weighted drain, then a clean mean-preserving departure), and ``join``
-    (``join_steps`` pre-declared growth; simulator-only).
+    weighted drain, then a clean mean-preserving departure), ``join``
+    (``join_steps`` pre-declared growth; simulator-only unless wrapped in a
+    spare pool), and ``deadline`` (per-round gossip deadline ``deadline_ms``
+    with latency-spike probability ``rate`` and exponential
+    ``deadline_backoff`` readmission).
+
+    ``spare_ranks=S`` wraps ANY kind in a ``SparePool`` over a mesh of
+    ``n`` total ranks whose last S ride as alive-masked zero-weight ghosts:
+    the inner model is built at ``n - S`` active ranks, and a ``join``
+    inner's pre-declared joins become spare *activations* — elastic
+    membership that runs on the fixed-mesh SPMD trainer.  With spares a
+    pool is always returned (the ghost masks alone make the run faulty)
+    even when the inner kind realizes nothing.
     """
+    if int(spare_ranks or 0) > 0:
+        inner = make_fault_model(
+            kind, n - int(spare_ranks), rate=rate, seed=seed,
+            down_steps=down_steps, k=k, drain_steps=drain_steps, boost=boost,
+            join_steps=join_steps, enumerate_programs=enumerate_programs,
+            deadline_ms=deadline_ms, deadline_mean_ms=deadline_mean_ms,
+            deadline_backoff=deadline_backoff,
+        )
+        return SparePool(
+            n=n, rate=0.0, seed=seed, spares=int(spare_ranks), inner=inner
+        )
     if kind in (None, "none"):
         return None
     if kind == "crash":
@@ -654,6 +949,13 @@ def make_fault_model(
     if kind == "join":
         m = Join(n=n, rate=rate, seed=seed, join_steps=join_steps)
         return m if m.join_steps else None
+    if kind == "deadline":
+        if rate == 0.0:
+            return None
+        return GossipDeadline(
+            n=n, rate=rate, seed=seed, deadline_ms=deadline_ms,
+            mean_ms=deadline_mean_ms, backoff=deadline_backoff,
+        )
     if rate == 0.0:
         return None
     if kind == "dropout":

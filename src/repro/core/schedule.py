@@ -177,6 +177,14 @@ def degraded_matrix(w, alive, link_up=None) -> np.ndarray:
     (``faults.Preemption``) up-weights a departing node exactly this way.
     Nonnegativity bounds the boost: node d's diagonal needs
     ``w_dd >= (b-1) * sum_j w_dj``.
+
+    *Ghost ranks.*  A rank masked dead from step 0 (``faults.SparePool``'s
+    spare, alive = 0 throughout) degrades to the exact identity row AND
+    column: it is an inert fixed point of the mixing and the alive block
+    stays doubly stochastic.  Over-provisioning a mesh with such ghosts is
+    therefore free in the mixing math, and *activating* one — flipping its
+    mask to 1 at an elastic join — is just a different runtime realization
+    of the same W: no re-formation, no new programs.
     """
     w = np.asarray(w, dtype=np.float64)
     n = w.shape[0]

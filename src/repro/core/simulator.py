@@ -28,6 +28,7 @@ unchanged.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Any, Callable, Iterator, Optional
 
@@ -35,6 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint.ckpt import validate_run_config as _validate_run_config
 from repro.core import dbench
 from repro.core.dsgd import Topology
 from repro.core.faults import (
@@ -135,6 +137,12 @@ class DecentralizedSimulator:
         self.has_rng = has_rng
         self.fault_model = topology.fault_model
         self._last_membership = None
+        # observational wall-clock trace for deadline runs: the seeded model
+        # drives the masks (determinism + engine equivalence), the engine
+        # just records measured per-round durations against the deadline
+        self._deadline_ms = getattr(self.fault_model, "deadline_ms", None)
+        self.round_ms: list = []
+        self.deadline_overruns = 0
         self._step_cache: dict[Any, Callable] = {}
         self.shard_nodes = bool(shard_nodes)
         self._sharding = (
@@ -459,6 +467,9 @@ class DecentralizedSimulator:
         Returns:
           (new_state, per_node_loss (n,), per_node_norms (n, n_leaves)).
         """
+        t_start = (
+            time.perf_counter() if self._deadline_ms is not None else None
+        )
         fr = None
         if self.fault_model is not None:
             fr = self.fault_model.at(state.step)
@@ -536,6 +547,7 @@ class DecentralizedSimulator:
                 p, o, loss, norms = self._bucketed_step(
                     state, batch, lr, rng, program, fault
                 )
+                self._record_round(loss, t_start)
                 return SimState(p, o, state.step + 1), loss, norms
         fn = self._step_for(
             state.step // self.mix_every, epoch, mix=mix, program_alive=palive
@@ -545,7 +557,21 @@ class DecentralizedSimulator:
             p, o, loss, norms = fn(*args, realization_arrays(fr))
         else:
             p, o, loss, norms = fn(*args)
+        self._record_round(loss, t_start)
         return SimState(p, o, state.step + 1), loss, norms
+
+    def _record_round(self, loss, t_start) -> None:
+        """Measured wall-clock round trace for deadline runs: blocks on the
+        loss so the duration covers the whole dispatched round, then counts
+        it against the model's ``deadline_ms``.  Purely observational —
+        the averaging masks stay seeded."""
+        if t_start is None:
+            return
+        jax.block_until_ready(loss)
+        ms = (time.perf_counter() - t_start) * 1e3
+        self.round_ms.append(ms)
+        if ms > float(self._deadline_ms):
+            self.deadline_overruns += 1
 
     # -- elastic growth ----------------------------------------------------------
     def _admit(self, state: SimState, fr, epoch: int) -> SimState:
@@ -584,8 +610,19 @@ class DecentralizedSimulator:
         """Engine run state a crash-consistent checkpoint must carry beyond
         (params, opt_state): the membership tracking (else the first
         post-resume membership change skips its controller re-arm) and the
-        controller's phase/rung/log state.  JSON-serializable."""
+        controller's phase/rung/log state.  JSON-serializable.
+
+        ``run_config`` records the load-bearing launch configuration
+        (topology name, bucket layout) so a mismatched ``--resume`` fails
+        fast at restore.  ``n`` stays OUTSIDE run_config: elastic joins
+        legitimately grow it mid-run, and restore resizes to match."""
         d: dict = {
+            "run_config": {
+                "topology": self.topology.name,
+                "bucket_mb": (
+                    None if self.bucket_mb is None else float(self.bucket_mb)
+                ),
+            },
             "n": int(self.n),
             "last_membership": (
                 None if self._last_membership is None
@@ -598,7 +635,14 @@ class DecentralizedSimulator:
         return d
 
     def restore_extra(self, d: dict) -> None:
-        """Inverse of ``snapshot_extra`` on a freshly-built engine."""
+        """Inverse of ``snapshot_extra`` on a freshly-built engine.
+
+        Validates the checkpoint's recorded ``run_config`` (topology and
+        bucket layout; NOT n — elastic resumes resize) fail-fast first."""
+        _validate_run_config(
+            d.get("run_config") or {}, topology=self.topology.name,
+            bucket_mb=self.bucket_mb,
+        )
         n = int(d.get("n", self.n))
         if n != self.n:
             # elastic resume: the run had already grown past the initial n

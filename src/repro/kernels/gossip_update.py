@@ -34,7 +34,11 @@ runtime operand too, and a second per-node (deg+1,) SMEM *fault row*
 and masks permute edges, renormalizing dropped weight onto self in-kernel
 (``degraded_matrix`` semantics): one executable serves every transient
 fault realization, and the all-ones row reproduces the fault-free math
-bit-for-bit.
+bit-for-bit.  The same row carries the elastic extremes: a *ghost* rank
+(``faults.SparePool`` spare — all-zero row) degrades to the identity and
+idles until its activation flips the row live, and a *deadline-benched*
+straggler keeps ``update = 1`` with edges masked — it descends locally
+while sitting out the gossip round.
 
 Layout: parameters are flattened and blocked 1-D ((block,) VMEM tiles,
 8·128-aligned); neighbor buffers arrive stacked (deg, P) — on TPU these are

@@ -43,6 +43,7 @@ against the simulator oracle.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Any, Callable, Optional
 
@@ -57,6 +58,7 @@ try:  # jax-version shim (PR 1); degrade gracefully to modern-API-only
 except ImportError:  # pragma: no cover
     _compat = None
 
+from repro.checkpoint.ckpt import validate_run_config as _validate_run_config
 from repro.core import dbench
 from repro.core.dsgd import Topology
 from repro.core.schedule import (
@@ -205,10 +207,21 @@ class SPMDTrainer:
         if self.fault_model is not None and self.fault_model.elastic:
             raise ValueError(
                 "elastic (join) fault models grow membership past the mesh's "
-                "gossip size; the SPMD trainer's device mesh is fixed — use "
-                "the DecentralizedSimulator for join dynamics"
+                "gossip size; the SPMD trainer's device mesh is fixed — "
+                "over-provision the mesh with spare ranks instead "
+                "(--spare-ranks / faults.SparePool: joins activate "
+                "alive-masked ghost ranks with zero recompiles), or use the "
+                "DecentralizedSimulator for true mid-run growth"
             )
         self._last_membership = None
+        # observational wall-clock deadline trace (GossipDeadline runs): the
+        # seeded model drives the masks — determinism and engine equivalence
+        # need that — while the engine records MEASURED per-round durations
+        # and overruns against the same deadline.  Enabling it synchronizes
+        # once per step (block on the loss), which the trace documents.
+        self._deadline_ms = getattr(self.fault_model, "deadline_ms", None)
+        self.round_ms: list = []
+        self.deadline_overruns = 0
         self.fused_apply = bool(fused_apply)
         if self.fused_apply:
             hyper = optimizer.hyper or {}
@@ -897,7 +910,23 @@ class SPMDTrainer:
         return fn
 
     # -- public API ------------------------------------------------------------------
+    def _record_round(self, loss, t_start) -> None:
+        """Measured wall-clock round trace for deadline runs (see
+        ``__init__``): blocks on the loss so the recorded duration covers
+        the whole dispatched round, then counts it against the model's
+        ``deadline_ms``.  Purely observational — masks stay seeded."""
+        if t_start is None:
+            return
+        jax.block_until_ready(loss)
+        ms = (time.perf_counter() - t_start) * 1e3
+        self.round_ms.append(ms)
+        if ms > float(self._deadline_ms):
+            self.deadline_overruns += 1
+
     def train_step(self, state: TrainState, batch: PyTree, lr: float, *, epoch: int = 0):
+        t_start = (
+            time.perf_counter() if self._deadline_ms is not None else None
+        )
         ctl = self.topology.controller
         fr = None
         if self.fault_model is not None and self.g > 1:
@@ -979,6 +1008,7 @@ class SPMDTrainer:
                 p, o, loss, norms = self._bucketed_step(
                     state, batch, lr, program, fault
                 )
+                self._record_round(loss, t_start)
                 return TrainState(p, o, state.step + 1), loss, norms
         fn = self.step_fn(
             epoch, step=state.step // self.mix_every,
@@ -992,6 +1022,7 @@ class SPMDTrainer:
             args = args + (realization_arrays(fr),)
         with _set_mesh(self.mesh):
             p, o, loss, norms = fn(*args)
+        self._record_round(loss, t_start)
         return TrainState(p, o, state.step + 1), loss, norms
 
     # -- crash-consistent resume -------------------------------------------------
@@ -1001,8 +1032,20 @@ class SPMDTrainer:
         post-resume membership change skips its controller re-arm) and the
         consensus controller's phase/rung/log state.  Fault realizations
         themselves are pure fn(seed, step) and need no persisting —
-        replaying from the checkpoint step regenerates them bit-exactly."""
+        replaying from the checkpoint step regenerates them bit-exactly.
+
+        ``run_config`` records the load-bearing launch configuration
+        (topology name, gossip size, bucket layout) so a mismatched
+        ``--resume`` fails fast at restore with a clear error instead of
+        surfacing as a shape/tree mismatch mid-run."""
         d: dict = {
+            "run_config": {
+                "topology": self.topology.name,
+                "n": int(self.g),
+                "bucket_mb": (
+                    None if self.bucket_mb is None else float(self.bucket_mb)
+                ),
+            },
             "last_membership": (
                 None if self._last_membership is None
                 else [bool(b) for b in self._last_membership]
@@ -1014,7 +1057,15 @@ class SPMDTrainer:
         return d
 
     def restore_extra(self, d: dict) -> None:
-        """Inverse of ``snapshot_extra`` on a freshly-built trainer."""
+        """Inverse of ``snapshot_extra`` on a freshly-built trainer.
+
+        Validates the checkpoint's recorded ``run_config`` against this
+        trainer's configuration first (fail-fast resume)."""
+        rc = d.get("run_config") or {}
+        _validate_run_config(
+            rc, topology=self.topology.name, n=int(self.g),
+            bucket_mb=self.bucket_mb, n_label="mesh gossip size",
+        )
         lm = d.get("last_membership")
         self._last_membership = (
             None if lm is None else tuple(bool(b) for b in lm)
@@ -1110,13 +1161,16 @@ def main() -> None:
                          "+ post-mixing only)")
     ap.add_argument("--fault-model", default="none",
                     choices=["none", "crash", "concurrent", "preempt",
-                             "dropout", "link", "straggler"],
+                             "join", "deadline", "dropout", "link",
+                             "straggler"],
                     help="seeded fault injection: permanent single-node "
                          "crash, k-node concurrent crashes, planned "
-                         "preemption drain, transient node dropout, "
-                         "Bernoulli link failure, or stragglers that skip "
-                         "the local update but still mix (core/faults.py; "
-                         "'join' is simulator-only — the mesh is fixed)")
+                         "preemption drain, pre-declared joins ('join' "
+                         "needs --spare-ranks on this fixed-mesh trainer), "
+                         "per-round gossip deadlines with backoff "
+                         "readmission, transient node dropout, Bernoulli "
+                         "link failure, or stragglers that skip the local "
+                         "update but still mix (core/faults.py)")
     ap.add_argument("--fault-rate", type=float, default=0.1,
                     help="per-step fault probability (crash/concurrent/"
                          "preempt: geometric onset)")
@@ -1137,6 +1191,26 @@ def main() -> None:
                     help="concurrent only: pre-enumerate the realized "
                          "multi-node degraded programs (bounded fast path) "
                          "instead of the composed runtime-mask default")
+    ap.add_argument("--fault-join-steps", default="",
+                    help="join only: comma-separated steps at which new "
+                         "members arrive (with --spare-ranks each join "
+                         "activates one spare rank)")
+    ap.add_argument("--spare-ranks", type=int, default=0,
+                    help="over-provision the gossip mesh with this many "
+                         "ghost ranks riding from step 0 as alive-masked "
+                         "zero-weight participants: joins/rejoins activate "
+                         "a spare with ZERO extra executables "
+                         "(faults.SparePool; composes with any "
+                         "--fault-model)")
+    ap.add_argument("--gossip-deadline-ms", type=float, default=30.0,
+                    help="deadline only: per-round gossip deadline; nodes "
+                         "whose (seeded) round latency misses it are masked "
+                         "out of that round's averaging and fall back to "
+                         "their local step")
+    ap.add_argument("--deadline-backoff", type=float, default=2.0,
+                    help="deadline only: exponential readmission backoff "
+                         "base — each consecutive miss benches the node "
+                         "for 1, b, b², ... rounds")
     ap.add_argument("--k-floor", default="2",
                     help="Ada decay floor: an int, or 'one_peer' for the "
                          "time-varying one-peer exponential family")
@@ -1146,6 +1220,13 @@ def main() -> None:
                          "fraction of its initial value (d_ada only)")
     ap.add_argument("--consensus-every", type=int, default=1,
                     help="consensus-distance probe cadence in steps")
+    ap.add_argument("--consensus-spike", type=float, default=None,
+                    help="non-monotone ladder: walk the closed-loop "
+                         "schedule back UP to a denser rung whenever a "
+                         "probed Ξ_t spikes past this multiple of the "
+                         "phase's running peak (crash, deadline storm, "
+                         "join; ~3.0 is a good start; needs "
+                         "--consensus-target)")
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--steps-per-epoch", type=int, default=10)
     ap.add_argument("--seq", type=int, default=64)
@@ -1198,15 +1279,23 @@ def main() -> None:
             )
     from repro.core.faults import make_fault_model
 
+    join_steps = (
+        tuple(int(x) for x in args.fault_join_steps.split(",") if x.strip())
+        or None
+    )
     fault_model = make_fault_model(
         args.fault_model, g, rate=args.fault_rate, seed=args.fault_seed,
         down_steps=args.fault_down_steps, k=args.fault_k,
-        drain_steps=args.fault_drain_steps,
+        drain_steps=args.fault_drain_steps, join_steps=join_steps,
         enumerate_programs=args.fault_enumerate,
+        spare_ranks=args.spare_ranks,
+        deadline_ms=args.gossip_deadline_ms,
+        deadline_backoff=args.deadline_backoff,
     )
     topo = make_topology(
         args.topology, g, k_floor=k_floor,
         consensus_target=args.consensus_target,
+        consensus_spike=args.consensus_spike,
         consensus_probe_every=args.consensus_every,
         fault_model=fault_model,
     )
@@ -1266,6 +1355,12 @@ def main() -> None:
                 extra=trainer.snapshot_extra(),
             )
     print(f"{args.steps} steps in {time.time()-t0:.1f}s")
+    if trainer.round_ms:
+        ms = np.asarray(trainer.round_ms)
+        print(f"deadline trace: median round {np.median(ms):.1f}ms "
+              f"p95 {np.percentile(ms, 95):.1f}ms | measured overruns "
+              f"{trainer.deadline_overruns}/{len(ms)} "
+              f"(deadline {trainer._deadline_ms}ms; masks stay seeded)")
     if topo.controller is not None:
         ctl = topo.controller
         rungs = " -> ".join(str(ctl.ladder[r]) for _, r in [(0, 0)] + ctl.transitions)

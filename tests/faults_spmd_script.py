@@ -52,6 +52,7 @@ src = SyntheticLM(vocab=cfg.vocab, seq_len=16, seed=0)
 key = jax.random.PRNGKey(42)
 
 maxdiff = 0.0
+elastic_diff = 0.0  # the two elastic-SPMD acceptance cases: join + deadline
 for kind, kw in [
     ("dropout", dict(rate=0.35, seed=3)),
     ("crash", dict(rate=0.8, seed=1, down_steps=3)),
@@ -60,6 +61,14 @@ for kind, kw in [
     ("concurrent", dict(rate=0.8, seed=2, k=2, down_steps=3)),
     # planned preemption: announce -> boosted drain -> exact handoff -> leave
     ("preempt", dict(rate=0.8, seed=1, drain_steps=3)),
+    # mid-run Join on the FIXED mesh: the pool over-provisions one spare
+    # rank riding as an alive-masked zero-weight ghost; the step-4 join
+    # activates it via the trainer's rejoin/adopt path, zero recompiles
+    ("join", dict(rate=0.0, seed=5, join_steps=(4,), spare_ranks=1)),
+    # per-round gossip deadline: seeded latency spikes mask stragglers out
+    # of that round's averaging (local-step fallback), exponential-backoff
+    # benching before readmission — all runtime masks over the base program
+    ("deadline", dict(rate=0.6, seed=4, deadline_ms=30.0)),
 ]:
     # --- SPMD engine -------------------------------------------------------
     fm = make_fault_model(kind, G, **kw)
@@ -72,9 +81,10 @@ for kind, kw in [
         state, loss, _ = trainer.train_step(state, batch, 0.05, epoch=0)
     used = {k[0] for k in trainer._step_cache if isinstance(k, tuple)}
     assert used <= allowed, f"{kind}: executables beyond the set: {used - allowed}"
-    if kind in ("dropout", "concurrent"):
-        # transient masks AND composed concurrent crashes compile exactly
-        # as many executables as the fault-free run
+    if kind in ("dropout", "concurrent", "join", "deadline"):
+        # transient masks, composed concurrent crashes, spare-rank joins,
+        # and deadline masking compile exactly as many executables as the
+        # fault-free run
         base = SPMDTrainer(
             cfg, mesh, make_topology("d_ring", G), opt, donate=False
         )
@@ -106,10 +116,12 @@ for kind, kw in [
     )
     diff = max(jax.tree.leaves(pd))
     maxdiff = max(maxdiff, diff)
+    if kind in ("join", "deadline"):
+        elastic_diff = max(elastic_diff, diff)
     print(f"{kind}: diff={diff:.3e} executables={len(used)}/{len(allowed)}")
 
-print(f"MAXDIFF={maxdiff:.3e}")
-if maxdiff < 5e-5:
+print(f"MAXDIFF={maxdiff:.3e} ELASTIC_MAXDIFF={elastic_diff:.3e}")
+if maxdiff < 5e-5 and elastic_diff < 1e-5:
     print("FAULTS_EQUIV_OK")
 else:
     sys.exit(1)

@@ -8,6 +8,13 @@ BIT-identical — every parameter/optimizer array and the JSON extra payload
 (controller transitions/events/trace + membership tracking): fault
 realizations are pure fn(seed, step), data and lr are step-keyed, so an
 interrupted run replays exactly.
+
+Second round-trip: a spare-rank pool run whose checkpoint lands BEFORE the
+join activates a ghost rank and whose resume crosses the activation —
+membership tracking and the seeded SparePool stream must replay the
+activation identically.  Finally: a mismatched-config ``--resume``
+(different topology) must fail fast with the recorded-vs-configured error,
+not a mid-restore shape mismatch.
 """
 import os
 import sys
@@ -53,4 +60,46 @@ assert "__extra__" in da.files  # the engine run state rode along
 bad = [k for k in da.files if not np.array_equal(da[k], db[k])]
 assert not bad, f"resume diverged on: {bad[:10]}"
 print(f"compared {len(da.files)} arrays (incl. controller/membership extra)")
+
+# --- round-trip crossing a spare-rank activation ---------------------------
+# ckpt at step 4, the pre-declared join activates the ghost rank at step 6:
+# the resumed half replays the activation (adopt + membership re-arm) from
+# the seeded stream alone and must land bit-identical at step 8.
+dir_c = os.path.join(base, "spare_uninterrupted")
+dir_d = os.path.join(base, "spare_interrupted")
+spare = [
+    "--arch", "granite-8b", "--reduced",
+    "--topology", "d_ada", "--k-floor", "one_peer",
+    "--consensus-target", "0.5",
+    "--fault-model", "join", "--fault-join-steps", "6",
+    "--spare-ranks", "1", "--fault-seed", "5",
+    "--steps-per-epoch", "10", "--seq", "16", "--per-node-batch", "2",
+    "--mesh", "4,2", "--ckpt-every", "4",
+]
+run(spare + ["--steps", "8", "--ckpt-dir", dir_c])
+run(spare + ["--steps", "4", "--ckpt-dir", dir_d])
+run(spare + ["--steps", "8", "--ckpt-dir", dir_d, "--resume"])
+dc = np.load(os.path.join(dir_c, ckpt))
+dd = np.load(os.path.join(dir_d, ckpt))
+assert set(dc.files) == set(dd.files)
+bad = [k for k in dc.files if not np.array_equal(dc[k], dd[k])]
+assert not bad, f"spare-activation resume diverged on: {bad[:10]}"
+print(f"compared {len(dc.files)} arrays across the spare activation")
+
+# --- fail-fast config validation -------------------------------------------
+# resuming the dir_b checkpoint under a different topology must raise the
+# recorded-vs-configured error, not an opaque restore failure
+try:
+    run([
+        "--arch", "granite-8b", "--reduced", "--topology", "d_ring",
+        "--steps-per-epoch", "10", "--seq", "16", "--per-node-batch", "2",
+        "--mesh", "4,2", "--steps", "8",
+        "--ckpt-dir", dir_b, "--resume",
+    ])
+    raise SystemExit("mismatched --resume should have failed fast")
+except ValueError as e:
+    assert "resume config mismatch" in str(e), e
+    assert "d_ada" in str(e) and "d_ring" in str(e), e
+    print(f"fail-fast resume: {e}")
+
 print("RESUME_ROUNDTRIP_OK")

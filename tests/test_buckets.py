@@ -418,6 +418,43 @@ def test_simulator_bucketed_equals_monolithic_under_faults():
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
 
 
+@pytest.mark.parametrize("kind,kw,n_bucket_execs", [
+    # preemption: float boost masks during the drain, then the depart's
+    # degraded program — a SECOND (program, width) pair per width
+    ("preempt", dict(rate=0.8, seed=1, drain_steps=3), 4),
+    # deadline: transient masks over the base program only
+    ("deadline", dict(rate=0.5, seed=4), 2),
+])
+def test_simulator_bucketed_faults_preempt_and_deadline(kind, kw, n_bucket_execs):
+    """Satellite (PR 8): Preemption drain/boost masks and gossip-deadline
+    masks dispatched per-bucket are bit-identical to the monolithic step,
+    and bucket executables still count (program, width) pairs only."""
+    n, steps = 8, 8
+    params, batches = _lin_setup(n, steps, seed=3)
+    finals = {}
+    for mb in (None, 2e-5):
+        fm = make_fault_model(kind, n, **kw)
+        sim = DecentralizedSimulator(
+            _lin_loss, sgd(momentum=0.9),
+            make_topology("d_ring", n, fault_model=fm),
+            bucket_mb=mb,
+        )
+        st_ = sim.init(params)
+        for t in range(steps):
+            st_, _, _ = sim.train_step(st_, batches[t], 0.05)
+        finals[mb] = st_.params
+        if mb is not None:
+            keys = [
+                k for k in sim._step_cache
+                if isinstance(k, tuple) and k[0] == "__bucket__"
+            ]
+            assert len(keys) == len(set(keys)) == n_bucket_execs
+    for a, b in zip(
+        jax.tree.leaves(finals[None]), jax.tree.leaves(finals[2e-5])
+    ):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
 def test_simulator_bucketed_respects_mix_every():
     """Off-cycle steps (mix_every=2) take the plain path; the bucketed
     dispatches only fire on gossip steps — and the two engines agree."""

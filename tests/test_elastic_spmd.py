@@ -1,0 +1,384 @@
+"""Elastic SPMD (PR 8): spare-rank pools, gossip deadlines with backoff
+readmission, and Ξ-spike re-densification.
+
+The load-bearing claims pinned here:
+
+* A ``SparePool`` pads any inner fault model to the full mesh size with
+  alive-masked zero-weight ghost ranks: ghost rows realize exactly the
+  identity (mass renormalized onto self via ``degraded_matrix``), the
+  selection mask stays all-ones (composed runtime-mask execution — zero
+  extra executables), and an inner ``Join`` surfaces as a spare
+  *activation* (outer rejoin) at the same step.
+* ``GossipDeadline`` masks deadline-missing nodes out of that round's
+  averaging while their ``update`` flag stays 1 (local-step fallback), and
+  benches repeat offenders under exponential backoff (1, b, b², ... rounds)
+  before readmission; realizations are pure fn(seed, step) under
+  out-of-order queries.
+* The ``ConsensusController`` ladder is non-monotone with ``spike``: a
+  probed Ξ_t spiking past ``spike ×`` the phase's running peak walks the
+  ladder back UP one rung, logs a "redensify" event, and the spike
+  reference survives a same-event ``rearm`` but resets on every
+  transition (one rung per event, no thrash).
+* Fail-fast ``--resume``: a checkpoint's recorded run_config (topology,
+  bucket layout, trainer gossip size) mismatching the resuming run raises
+  a clear both-values error instead of an opaque restore failure.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.ada import AdaSchedule
+from repro.core.consensus import ConsensusController
+from repro.core.dsgd import make_topology
+from repro.core.faults import (
+    GossipDeadline, Join, SparePool, degraded_matrix, make_fault_model,
+)
+from repro.core.simulator import DecentralizedSimulator, SimState
+from repro.optim.sgd import sgd
+
+
+def _quad_loss(p, b):
+    return jnp.mean((b - p["w"]) ** 2)
+
+
+# ---------------------------------------------------------------------------
+# SparePool: ghost ranks, activation, composition
+# ---------------------------------------------------------------------------
+
+def test_spare_pool_pads_ghosts_and_activates_on_join():
+    fm = make_fault_model("join", 6, seed=5, join_steps=(4,), spare_ranks=2)
+    assert isinstance(fm, SparePool)
+    assert fm.n == 6 and fm.spares == 2 and fm.n_active0 == 4
+    assert not fm.elastic  # fixed-mesh: the SPMD trainer must accept it
+    fr0 = fm.at(0)
+    np.testing.assert_array_equal(fr0.alive, [1, 1, 1, 1, 0, 0])
+    np.testing.assert_array_equal(fr0.update, [1, 1, 1, 1, 0, 0])
+    np.testing.assert_array_equal(fr0.program_alive,
+                                  [True, True, True, True, False, False])
+    # composed execution: selection mask all-ones, no degraded programs
+    assert fr0.selection_mask().all()
+    assert fm.program_masks() == ()
+    assert fr0.faulty  # ghost masks alone route through the masked step
+    # the step-4 inner join becomes an outer spare ACTIVATION (rejoin)
+    fr4 = fm.at(4)
+    assert fr4.rejoin == (4,)
+    np.testing.assert_array_equal(fr4.alive, [1, 1, 1, 1, 1, 0])
+    assert fm.activation_steps() == (4,)
+    # membership key flips at activation -> controller re-arm fires
+    assert fm.at(3).membership_key() != fr4.membership_key()
+
+
+def test_spare_pool_ghost_rows_renormalize_to_identity():
+    """The ghost-rank semantics: a zero-weight (dead-masked) row of the
+    doubly-stochastic W renormalizes its mass onto the receiver's diagonal
+    — the alive block stays doubly stochastic, ghost rows are exactly
+    identity, so ghosts ride from step 0 at zero influence."""
+    from repro.core.graphs import Ring
+
+    W = Ring(6).mixing_matrix()
+    alive = np.array([True, True, True, True, False, False])
+    D = degraded_matrix(W, alive)
+    for g in (4, 5):
+        row = np.zeros(6)
+        row[g] = 1.0
+        np.testing.assert_allclose(D[g], row, atol=1e-12)
+        np.testing.assert_allclose(D[:, g], row, atol=1e-12)
+    block = D[np.ix_(alive, alive)]
+    np.testing.assert_allclose(block.sum(axis=0), 1.0, atol=1e-12)
+    np.testing.assert_allclose(block.sum(axis=1), 1.0, atol=1e-12)
+
+
+def test_spare_pool_pure_overprovision_and_inner_composition():
+    # spares with NO inner faults: still a pool (ghost masks make it faulty)
+    fm = make_fault_model("none", 4, spare_ranks=2)
+    assert isinstance(fm, SparePool) and fm.inner is None
+    np.testing.assert_array_equal(fm.at(7).alive, [1, 1, 0, 0])
+    # spares compose with a transient inner model at n - S active ranks
+    fm2 = make_fault_model("deadline", 6, rate=0.6, seed=4, spare_ranks=2)
+    assert isinstance(fm2.inner, GossipDeadline) and fm2.inner.n == 4
+    assert fm2.deadline_ms == fm2.inner.deadline_ms
+    for t in range(10):
+        fr = fm2.at(t)
+        assert len(fr.alive) == 6
+        np.testing.assert_array_equal(fr.alive[4:], [0, 0])  # ghosts stay out
+        np.testing.assert_array_equal(fr.alive[:4], fm2.inner.at(t).alive)
+
+
+def test_spare_pool_validation():
+    with pytest.raises(ValueError, match="spares"):
+        SparePool(n=4, rate=0.0, seed=0, spares=4, inner=None)
+    with pytest.raises(ValueError, match="inner"):
+        SparePool(n=4, rate=0.0, seed=0, spares=1,
+                  inner=Join(n=4, rate=0.0, seed=0, join_steps=(2,)))
+    with pytest.raises(ValueError, match="join"):
+        SparePool(n=4, rate=0.0, seed=0, spares=1,
+                  inner=Join(n=3, rate=0.0, seed=0, join_steps=(2, 4)))
+
+
+def test_spare_activation_join_on_simulator_keeps_ghosts_frozen():
+    """End-to-end on the oracle: ghost rows stay bit-frozen at init until
+    the activation step, then the activated spare adopts its alive
+    neighbors' average and participates from the next round on."""
+    fm = make_fault_model("join", 6, seed=5, join_steps=(3,), spare_ranks=2)
+    topo = make_topology("d_ring", 6, fault_model=fm)
+    sim = DecentralizedSimulator(_quad_loss, sgd(0.1), topo)
+    state = sim.init({"w": jnp.zeros((3,), jnp.float32)})
+    rng = np.random.default_rng(0)
+    state = SimState(
+        {"w": jnp.asarray(rng.normal(size=(6, 3)).astype(np.float32))},
+        state.opt_state, 0,
+    )
+    init_rows = np.asarray(state.params["w"]).copy()
+    for t in range(3):
+        b = jnp.asarray(rng.normal(size=(6, 2, 3)).astype(np.float32))
+        state, _, _ = sim.train_step(state, b, 0.05)
+        np.testing.assert_array_equal(  # both ghosts frozen pre-activation
+            np.asarray(state.params["w"])[4:], init_rows[4:]
+        )
+    # activation step: rank 4 adopts, rank 5 stays a ghost
+    b = jnp.asarray(rng.normal(size=(6, 2, 3)).astype(np.float32))
+    state, _, _ = sim.train_step(state, b, 0.05)
+    post = np.asarray(state.params["w"])
+    assert not np.array_equal(post[4], init_rows[4])
+    np.testing.assert_array_equal(post[5], init_rows[5])
+    assert np.isfinite(post).all()
+
+
+# ---------------------------------------------------------------------------
+# GossipDeadline: masking, local-step fallback, exponential backoff
+# ---------------------------------------------------------------------------
+
+def test_deadline_miss_masks_gossip_but_keeps_local_update():
+    fm = GossipDeadline(n=8, rate=0.5, seed=4)
+    missed_any = False
+    for t in range(20):
+        fr = fm.at(t)
+        np.testing.assert_array_equal(fr.update, np.ones(8))  # local fallback
+        assert fr.program_alive.all()  # transient: no membership change
+        assert fr.selection_mask().all()  # composed: zero extra executables
+        if not fr.alive.all():
+            missed_any = True
+            assert fr.faulty
+    assert missed_any  # rate 0.5 over 20 rounds must realize misses
+
+
+def test_deadline_backoff_benches_exponentially():
+    """A node that misses is benched 1 round; missing again right after
+    readmission benches it 2, then 4 ... (factor ``backoff``), and a clean
+    participated round resets its penalty to 1."""
+    fm = GossipDeadline(n=4, rate=0.5, seed=0, backoff=2.0)
+    lat = {t: fm.latency_ms(t) for t in range(64)}
+    participates = {t: np.asarray(fm.at(t).alive, bool) for t in range(64)}
+    penalty = np.ones(4)
+    suspend = np.zeros(4, dtype=np.int64)
+    for t in range(64):
+        miss = lat[t] > fm.deadline_ms
+        benched = suspend > 0
+        expect = ~(miss | benched)
+        np.testing.assert_array_equal(
+            participates[t], expect, err_msg=f"step {t}"
+        )
+        suspend[benched] -= 1
+        fresh = miss & ~benched
+        suspend[fresh] += np.round(penalty[fresh]).astype(np.int64)
+        penalty[fresh] = np.minimum(penalty[fresh] * 2.0, 64.0)
+        penalty[expect] = 1.0
+    # the exponential actually engaged: some bench stretch exceeded 1 round
+    runs = []
+    for i in range(4):
+        out = ~np.array([participates[t][i] for t in range(64)])
+        run, best = 0, 0
+        for v in out:
+            run = run + 1 if v else 0
+            best = max(best, run)
+        runs.append(best)
+    assert max(runs) >= 3  # miss + bench(1) + miss + bench(2) chains exist
+
+
+def test_deadline_determinism_out_of_order():
+    a = GossipDeadline(n=6, rate=0.5, seed=9)
+    b = GossipDeadline(n=6, rate=0.5, seed=9)
+    for t in [0, 1, 5, 17, 17, 3, 11, 2]:  # replay cache: any query order
+        np.testing.assert_array_equal(a.at(t).alive, b.at(t).alive)
+
+
+def test_deadline_validation_and_factory():
+    with pytest.raises(ValueError, match="deadline_ms"):
+        GossipDeadline(n=4, rate=0.5, seed=0, deadline_ms=0.0)
+    with pytest.raises(ValueError, match="backoff"):
+        GossipDeadline(n=4, rate=0.5, seed=0, backoff=0.5)
+    assert make_fault_model("deadline", 8, rate=0.0) is None
+    fm = make_fault_model(
+        "deadline", 8, rate=0.3, seed=1, deadline_ms=12.0, deadline_backoff=3.0
+    )
+    assert fm.deadline_ms == 12.0 and fm.backoff == 3.0
+    with pytest.raises(ValueError, match="down_steps"):
+        make_fault_model("deadline", 8, rate=0.3, down_steps=4)
+
+
+def test_deadline_round_trace_is_recorded():
+    """Engines record measured wall-clock round durations against the
+    model's deadline (observational; masks stay seeded)."""
+    fm = make_fault_model("deadline", 4, rate=0.5, seed=4)
+    topo = make_topology("d_ring", 4, fault_model=fm)
+    sim = DecentralizedSimulator(_quad_loss, sgd(0.1), topo)
+    state = sim.init({"w": jnp.zeros((3,), jnp.float32)})
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        b = jnp.asarray(rng.normal(size=(4, 2, 3)).astype(np.float32))
+        state, _, _ = sim.train_step(state, b, 0.05)
+    assert len(sim.round_ms) == 5
+    assert all(ms > 0 for ms in sim.round_ms)
+    assert 0 <= sim.deadline_overruns <= 5
+
+
+# ---------------------------------------------------------------------------
+# Non-monotone ladder: Ξ-spike re-densification
+# ---------------------------------------------------------------------------
+
+def _spike_controller(spike=2.0):
+    return ConsensusController(
+        schedule=AdaSchedule(n_nodes=8, k0=4, gamma_k=0.02, k_floor=2),
+        target=0.5, spike=spike,
+    )
+
+
+def test_spike_walks_ladder_back_up_and_logs_redensify():
+    c = _spike_controller()
+    assert not c.observe(1.0, 0)       # seeds the phase
+    assert c.observe(0.4, 1)           # <= target x xi0: down a rung
+    assert c.rung == 1
+    c.rearm(2, "membership")           # a membership event between probes
+    assert not c.observe(0.6, 2)       # re-seeds; also seeds the spike ref
+    assert not c.observe(1.5, 3)       # 1.5 >= 2.0 * 0.6: re-densify UP
+    assert c.rung == 0
+    assert (3, 0) in c.transitions
+    assert any(r == "redensify" for _, r in c.events)
+    # the redensified phase re-seeds at the spiked level: recovery
+    # re-sparsifies through the NORMAL target trigger, closing the loop
+    assert c.observe(0.7, 4) is False  # seeds new phase at 0.7... wait
+    assert c.observe(0.3, 5)           # 0.3 <= 0.5 * 0.7: back down
+    assert c.rung == 1
+
+
+def test_spike_fires_at_most_one_rung_per_event():
+    c = _spike_controller()
+    c.observe(1.0, 0)
+    c.observe(0.4, 1)                  # down to rung 1
+    c.observe(0.5, 2)                  # spike ref = 0.5
+    assert not c.observe(5.0, 3)       # huge spike: ONE rung up, ref reset
+    assert c.rung == 0
+    assert not c.observe(5.0, 4)       # no second fire off the same storm
+    assert c.rung == 0
+
+
+def test_spike_never_fires_at_densest_rung_or_without_ref():
+    c = _spike_controller()
+    assert not c.observe(1.0, 0)
+    assert not c.observe(50.0, 1)      # rung 0: nowhere denser to go
+    assert c.rung == 0 and all(r != "redensify" for _, r in c.events)
+
+
+def test_spike_state_roundtrips_and_default_is_monotone():
+    c = _spike_controller()
+    c.observe(1.0, 0)
+    c.observe(0.4, 1)
+    c.observe(0.6, 2)
+    d = c.state_dict()
+    c2 = _spike_controller()
+    c2.load_state_dict(d)
+    c2.observe(1.5, 3)                 # the restored spike ref still fires
+    assert c2.rung == 0
+    assert any(r == "redensify" for _, r in c2.events)
+    # spike=None (the default) stays strictly monotone
+    m = ConsensusController(
+        schedule=AdaSchedule(n_nodes=8, k0=4, gamma_k=0.02, k_floor=2),
+        target=0.5,
+    )
+    m.observe(1.0, 0)
+    m.observe(0.4, 1)
+    m.observe(99.0, 2)
+    assert m.rung == 1 and [r for _, r in m.events] == []
+
+
+def test_spike_validation_requires_ratio_and_target():
+    with pytest.raises(ValueError, match="spike"):
+        _spike_controller(spike=0.8)
+    with pytest.raises(ValueError, match="consensus_target"):
+        make_topology("d_ada", 8, consensus_spike=3.0, k_floor="one_peer")
+
+
+def test_redensify_on_injected_xi_spike_closed_loop():
+    """Acceptance (ISSUE 8): an injected consensus storm — one node's
+    replica knocked far off mid-run, as a crash/deadline pile-up does —
+    raises the probed Ξ_t past the re-arm threshold and the closed-loop
+    controller demonstrably steps BACK to a denser rung, transition in
+    the event log."""
+    topo = make_topology(
+        "d_ada", 8, k0=4, consensus_target=0.3, consensus_spike=2.0,
+        k_floor=2,
+    )
+    sim = DecentralizedSimulator(_quad_loss, sgd(0.1), topo)
+    state = sim.init({"w": jnp.zeros((4,), jnp.float32)})
+    rng = np.random.default_rng(3)
+    state = SimState(
+        {"w": jnp.asarray(rng.normal(size=(8, 4)).astype(np.float32))},
+        state.opt_state, 0,
+    )
+    zero = jnp.zeros((8, 2, 4), jnp.float32)
+    ctl = topo.controller
+    # pure gossip (lr=0) contracts Ξ until the target fires a down-step
+    t = 0
+    while not ctl.transitions and t < 40:
+        state, _, _ = sim.train_step(state, zero, 0.0)
+        t += 1
+    assert ctl.transitions, "closed loop never sparsified"
+    rung_before = ctl.rung
+    state, _, _ = sim.train_step(state, zero, 0.0)  # probe seeds spike ref
+    t += 1
+    # the storm: node 0 blasted away from consensus
+    w = np.asarray(state.params["w"]).copy()
+    w[0] += 50.0
+    state = SimState({"w": jnp.asarray(w)}, state.opt_state, state.step)
+    state, _, _ = sim.train_step(state, zero, 0.0)
+    assert ctl.rung == rung_before - 1  # denser
+    assert any(r == "redensify" for _, r in ctl.events)
+    assert ctl.transitions[-1][1] == rung_before - 1
+
+
+# ---------------------------------------------------------------------------
+# Fail-fast resume validation (simulator side; trainer side in test_spmd's
+# resume_cli_script)
+# ---------------------------------------------------------------------------
+
+def _sim(topo_name="d_ring", bucket_mb=None):
+    topo = make_topology(topo_name, 8)
+    return DecentralizedSimulator(
+        _quad_loss, sgd(momentum=0.9), topo, bucket_mb=bucket_mb
+    )
+
+
+def test_restore_extra_validates_topology_and_buckets():
+    snap = _sim("d_ring", bucket_mb=2.0).snapshot_extra()
+    assert snap["run_config"]["topology"] == "d_ring"
+    assert snap["run_config"]["bucket_mb"] == 2.0
+    # matching config restores fine
+    _sim("d_ring", bucket_mb=2.0).restore_extra(snap)
+    with pytest.raises(ValueError, match="d_ring.*d_one_peer_exp"):
+        _sim("d_one_peer_exp", bucket_mb=2.0).restore_extra(snap)
+    with pytest.raises(ValueError, match="bucket_mb"):
+        _sim("d_ring", bucket_mb=None).restore_extra(snap)
+    # pre-run_config checkpoints (old payloads) skip the check
+    _sim("d_one_peer_exp").restore_extra({"last_membership": None})
+
+
+def test_restore_extra_keeps_elastic_resize_for_n():
+    """n stays OUTSIDE the validated run_config on the simulator: elastic
+    joins legitimately grow it, and restore resizes to match."""
+    sim = _sim("d_ring")
+    snap = sim.snapshot_extra()
+    assert "n" not in snap["run_config"] and snap["n"] == 8
+    grown = dict(snap, n=10)
+    sim2 = _sim("d_ring")
+    sim2.restore_extra(grown)
+    assert sim2.n == 10 and sim2.topology.n_nodes == 10
