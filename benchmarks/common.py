@@ -46,7 +46,14 @@ def save_bench_section(section: str, payload) -> str:
     committed: it records per-program-class step time and bytes-on-wire so
     the perf trajectory is comparable across PRs.  step_time and comm_cost
     each own a section; a partial run only refreshes its own keys.
+
+    The payload is schema-gated through the static verifier before any
+    write: a malformed section would silently corrupt the cross-PR
+    trajectory at merge time, long after the run that produced it.
     """
+    from repro.analysis.invariants import verify_bench_payload
+
+    verify_bench_payload(section, payload)
     path = os.path.abspath(BENCH_PATH)
     data = {}
     if os.path.exists(path):

@@ -1,0 +1,36 @@
+"""Static analysis over the gossip stack: program verifier, collective
+linter, recompile sanitizer, kernel budget checker.
+
+Run the whole pipeline with ``python -m repro.analysis --all`` (see
+``__main__.py`` and ``analysis/README.md``).  Submodules are imported
+lazily so that ``kernels/gossip_update.py`` can pull ``analysis.budget``
+without dragging jax-heavy passes in:
+
+  * ``analysis.invariants``  — mixing-program/IR invariants (pass 1)
+  * ``analysis.collectives`` — HLO collective-deadlock linter (pass 2)
+  * ``analysis.recompile``   — retrace/compile sanitizer (pass 3)
+  * ``analysis.budget``      — Pallas kernel budget checker (pass 4)
+
+Only the shared report vocabulary is eager.
+"""
+from repro.analysis.report import (
+    AnalysisViolation,
+    BudgetViolation,
+    CollectiveViolation,
+    Finding,
+    InvariantViolation,
+    PassReport,
+    RetraceError,
+    run_pass,
+)
+
+__all__ = [
+    "AnalysisViolation",
+    "InvariantViolation",
+    "CollectiveViolation",
+    "RetraceError",
+    "BudgetViolation",
+    "Finding",
+    "PassReport",
+    "run_pass",
+]

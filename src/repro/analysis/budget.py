@@ -1,0 +1,115 @@
+"""Pass 4 — the Pallas kernel budget checker.
+
+``kernels/gossip_update.py`` documents a per-grid-cell memory layout
+(see ``kernels/README.md``): the scalar hyperparams and the per-node
+weight/fault rows live in SMEM, the parameter/gradient/momentum tiles and
+the ``(1, deg, block)`` neighbor stack in VMEM.  Those budgets are real
+hardware limits on TPU (~16 MiB VMEM per core; SMEM rows must stay tiny
+scalars), and nothing previously checked them — a high-degree program or
+an oversized ``block`` would sail through tracing and fail (or silently
+spill) at the worst possible time.  This pass validates the layout
+arithmetic BEFORE dispatch:
+
+  * SMEM per cell: ``8 B`` hyper scalars + 2 rows × ``4·(deg+1) B``
+    (weights + fault) — bounded by ``SMEM_BUDGET_BYTES``.
+  * VMEM per cell: ``(deg + 5)·4·block`` bytes with momentum
+    (θ/g/m tiles + deg neighbor tiles + θ'/m' outs), ``(deg + 3)·4·block``
+    without — bounded by ``VMEM_BUDGET_BYTES``, compiled mode only: the
+    interpreter's 2^20 default block is a host-level loop where the tile
+    bound is correctness-irrelevant.
+  * compiled blocks should be lane-aligned (multiples of 128); the
+    dispatch path pads to a block multiple, so misalignment is a
+    performance bug surfaced by the CLI, not a hard failure.
+
+``check_kernel_budget`` is called (lru-cached per signature) by every
+fused dispatch entry point in ``gossip_update.py``.
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+
+from repro.analysis.report import BudgetViolation
+
+__all__ = [
+    "SMEM_BUDGET_BYTES",
+    "VMEM_BUDGET_BYTES",
+    "LANE",
+    "kernel_cell_cost",
+    "check_kernel_budget",
+    "verify_program_budget",
+]
+
+# Documented budgets (kernels/README.md).  SMEM on TPU is O(KiB) of scalar
+# memory per core; the kernel keeps two (deg+1,) f32 rows + 2 scalars
+# there.  VMEM is ~16 MiB/core; leave headroom for double-buffering.
+SMEM_BUDGET_BYTES = 4 << 10
+VMEM_BUDGET_BYTES = 16 << 20
+LANE = 128  # f32 lane width of a TPU vreg tile row
+_HYPER_BYTES = 8  # [lr, beta] f32 scalars
+
+
+def kernel_cell_cost(deg: int, block: int, *, has_momentum: bool = True) -> dict:
+    """SMEM/VMEM bytes one (node, block) grid cell of the fused kernel
+    holds resident, per the documented BlockSpec layout."""
+    smem = _HYPER_BYTES + 2 * 4 * (deg + 1)  # weights row + fault row
+    tiles = (3 if has_momentum else 2) + deg + (2 if has_momentum else 1)
+    vmem = tiles * 4 * block
+    return {"smem_bytes": smem, "vmem_bytes": vmem, "vmem_tiles": tiles}
+
+
+@lru_cache(maxsize=256)
+def check_kernel_budget(deg: int, block: int, *, interpret: bool = False,
+                        has_momentum: bool = True) -> dict:
+    """Validate one kernel dispatch signature against the budgets.
+
+    Raises ``BudgetViolation`` on a hard violation; returns the cell cost
+    (plus an ``aligned`` flag) otherwise.  Cached per signature so the
+    hot dispatch path pays one dict lookup.
+    """
+    if deg < 0:
+        raise BudgetViolation(f"negative program degree {deg}")
+    if block < 1:
+        raise BudgetViolation(f"non-positive kernel block {block}")
+    cost = kernel_cell_cost(deg, block, has_momentum=has_momentum)
+    if cost["smem_bytes"] > SMEM_BUDGET_BYTES:
+        raise BudgetViolation(
+            f"SMEM rows for deg={deg} need {cost['smem_bytes']} B/cell "
+            f"(> {SMEM_BUDGET_BYTES} B budget) — the per-node weight/fault "
+            "rows no longer fit scalar memory; split the program into "
+            "fewer rounds per dispatch"
+        )
+    if not interpret and cost["vmem_bytes"] > VMEM_BUDGET_BYTES:
+        raise BudgetViolation(
+            f"VMEM tile set for deg={deg}, block={block} needs "
+            f"{cost['vmem_bytes']} B/cell ({cost['vmem_tiles']} tiles × 4·"
+            f"{block} B) > {VMEM_BUDGET_BYTES} B budget — shrink the block "
+            "or the neighbor degree before dispatch"
+        )
+    cost["aligned"] = bool(interpret or block % LANE == 0)
+    return cost
+
+
+def verify_program_budget(program, *, block: int | None = None,
+                          interpret: bool = False,
+                          has_momentum: bool = True) -> dict | None:
+    """Budget-check the kernel signature ``program`` would dispatch with.
+
+    Programs without permute tables (dense/fused) never reach the Pallas
+    kernel — returns ``None`` for those.  ``block=None`` uses the
+    compiled-mode default tile.
+    """
+    tables = program.permute_tables()
+    if tables is None:
+        return None
+    srcs, weights = tables
+    n, deg = srcs.shape
+    if weights.shape != (n, deg + 1):
+        raise BudgetViolation(
+            f"program {program.name!r}: weight table {weights.shape} does "
+            f"not match the ({n}, {deg + 1}) SMEM row layout"
+        )
+    if block is None:
+        block = 1024  # _auto_block compiled default
+    return check_kernel_budget(
+        deg, block, interpret=interpret, has_momentum=has_momentum
+    )

@@ -1,0 +1,215 @@
+"""Pass 2 — the collective-deadlock linter.
+
+Collective-bearing executables deadlock in two ways this repo has hit:
+
+  1. **Sequence divergence.**  Cross-device collectives rendezvous by
+     (kind, source-target pairs, order).  Two realizations of the same
+     step that can co-execute — the unmasked ``apply_shard`` program and
+     its runtime-masked ``apply_shard_masked`` twin — MUST lower to the
+     identical collective sequence: dropped edges still traverse the wire
+     with weight zero.  If masking ever changed the permute schedule, one
+     rank running masked against a rank running unmasked would wait at
+     different rendezvous forever.
+  2. **Unbounded dispatch.**  XLA:CPU matches cross-module collectives at
+     a global rendezvous; queueing hundreds of collective-bearing bucket
+     launches strands ranks there (root-caused at 551 in-flight buckets,
+     see ``core/buckets.MAX_INFLIGHT_BUCKETS``).  Any loop dispatching
+     per-bucket executables must bound its in-flight window.
+
+Plus the repo-wide hot-path ban: colorable graphs must never lower to an
+all-gather (the dense ``GatherRow`` fallback leaking back).
+
+Checks, all built on ``launch/hlo_analysis``'s ``CollectiveReport``:
+
+  * ``collective_signature`` — ordered (kind, source_target_pairs /
+    replica_groups) sequence of an HLO module's collectives.
+  * ``assert_signatures_consistent`` — equality across co-executable
+    realizations, with the first diverging op spelled out.
+  * ``lint_no_forbidden`` — the all-gather ban, offending op names named.
+  * ``lint_dispatch_loops`` — AST lint of engine source: a loop
+    dispatching bucket executables must reference
+    ``MAX_INFLIGHT_BUCKETS`` or block on in-flight work inside the loop.
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from repro.analysis.report import CollectiveViolation, Finding
+from repro.launch.hlo_analysis import (
+    COLLECTIVE_KINDS,
+    CollectiveReport,
+    _hlo_text_of,
+    collective_counts,
+)
+
+__all__ = [
+    "collective_signature",
+    "assert_signatures_consistent",
+    "lint_no_forbidden",
+    "lint_dispatch_loops",
+    "lint_engine_sources",
+]
+
+_COLL_LINE_RE = re.compile(
+    r"=\s*[^=]*?\b(" + "|".join(COLLECTIVE_KINDS) + r")(?:-start)?\("
+)
+# the pair/group lists nest braces ({{0,1},{1,0}}), so the match must run
+# to the DOUBLE closing brace — [^}]* would truncate at the first pair
+_PAIRS_RE = re.compile(r"source_target_pairs=\{\{.*?\}\}")
+_GROUPS_RE = re.compile(
+    r"replica_groups=(?:\{\{.*?\}\}|\{[^{}]*\}|\[[^\]]*\])"
+)
+_CHANNEL_RE = re.compile(r"channel_id=(\d+)")
+
+
+def collective_signature(fn_or_hlo, *args) -> tuple[tuple[str, str], ...]:
+    """Ordered (kind, rendezvous-attrs) sequence of a module's collectives.
+
+    The rendezvous identity of each op is its kind plus its source-target
+    pairs (permutes) or replica groups (reductions/gathers) as printed in
+    the HLO text, in module order — exactly what two co-executing ranks
+    must agree on.  Channel ids are intentionally EXCLUDED: they are
+    assigned per-module and may differ between two separately-compiled
+    realizations that still rendezvous correctly by structure.
+    """
+    text = _hlo_text_of(fn_or_hlo, *args)
+    sig = []
+    for line in text.splitlines():
+        m = _COLL_LINE_RE.search(line)
+        if m is None or "-done" in line.split("=", 1)[-1][:40]:
+            continue
+        kind = m.group(1)
+        pm = _PAIRS_RE.search(line)
+        gm = _GROUPS_RE.search(line)
+        attrs = pm.group(0) if pm else (gm.group(0) if gm else "")
+        sig.append((kind, attrs))
+    return tuple(sig)
+
+
+def assert_signatures_consistent(signatures: dict) -> None:
+    """All labelled realizations must carry the identical collective
+    sequence (kinds, order, rendezvous attrs)."""
+    if len(signatures) < 2:
+        return
+    items = sorted(signatures.items())
+    ref_label, ref = items[0]
+    for label, sig in items[1:]:
+        if sig == ref:
+            continue
+        detail = f"{len(ref)} vs {len(sig)} collectives"
+        for i, (a, b) in enumerate(zip(ref, sig)):
+            if a != b:
+                detail = f"op {i}: {a} vs {b}"
+                break
+        raise CollectiveViolation(
+            f"collective sequences diverge between co-executable "
+            f"realizations {ref_label!r} and {label!r} ({detail}) — ranks "
+            "selecting different realizations would rendezvous at "
+            "different collectives and deadlock"
+        )
+
+
+def lint_no_forbidden(fn_or_hlo, *args, forbid=("all-gather",)) -> CollectiveReport:
+    """The hot-path collective ban, with offending op names in the error."""
+    report = collective_counts(fn_or_hlo, *args)
+    bad = report.offending(forbid)
+    if bad:
+        raise CollectiveViolation(
+            f"forbidden collective(s) on the hot path: "
+            + ", ".join(f"{k} × {report[k]} (ops: {list(v)})" for k, v in bad.items())
+            + " — the dense GatherRow fallback leaked back in"
+        )
+    return report
+
+
+# -- dispatch-window lint ----------------------------------------------------
+
+# Dispatch loops iterate per-bucket widths/work (``for b, w in
+# enumerate(layout.widths)``); host-side slicing loops iterate ``segments``
+# and launch nothing, so they are deliberately NOT matched.
+_BUCKET_NAME = re.compile(r"width|bucket|inflight", re.IGNORECASE)
+
+
+def _names_in(node) -> set[str]:
+    out = set()
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name):
+            out.add(sub.id)
+        elif isinstance(sub, ast.Attribute):
+            out.add(sub.attr)
+    return out
+
+
+def _is_bucket_loop(loop: ast.AST) -> bool:
+    """A for/while loop that iterates bucket-shaped work and makes calls."""
+    if isinstance(loop, ast.For):
+        iter_names = _names_in(loop.iter)
+    elif isinstance(loop, ast.While):
+        iter_names = _names_in(loop.test)
+    else:
+        return False
+    if not any(_BUCKET_NAME.search(n) for n in iter_names):
+        return False
+    return any(
+        isinstance(sub, ast.Call)
+        for stmt in loop.body
+        for sub in ast.walk(stmt)
+    )
+
+
+def _loop_is_bounded(loop: ast.AST) -> bool:
+    names = set()
+    for stmt in loop.body:
+        names |= _names_in(stmt)
+    return "MAX_INFLIGHT_BUCKETS" in names or "block_until_ready" in names
+
+
+def lint_dispatch_loops(source: str, path: str = "<string>") -> list[Finding]:
+    """Flag loops that can queue unbounded collective-bearing dispatches.
+
+    Rule: any loop iterating per-bucket/per-segment work that makes calls
+    must, inside the loop body, either consult ``MAX_INFLIGHT_BUCKETS`` or
+    block on in-flight work (``block_until_ready``) — otherwise every
+    iteration enqueues another collective-bearing launch and fine bucket
+    sizes strand the XLA:CPU rendezvous (551-bucket incident, PR 7).
+    """
+    findings = []
+    tree = ast.parse(source, filename=path)
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for loop in ast.walk(fn):
+            if not _is_bucket_loop(loop):
+                continue
+            if not _loop_is_bounded(loop):
+                findings.append(
+                    Finding(
+                        "collectives",
+                        f"{path}:{loop.lineno} ({fn.name})",
+                        "per-bucket dispatch loop has no in-flight bound: "
+                        "neither MAX_INFLIGHT_BUCKETS nor block_until_ready "
+                        "appears in the loop body — can exceed "
+                        "MAX_INFLIGHT_BUCKETS collective launches in flight",
+                    )
+                )
+    return findings
+
+
+def lint_engine_sources(paths=None) -> list[Finding]:
+    """Run the dispatch-window lint over the engines' dispatch modules."""
+    import os
+
+    if paths is None:
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        paths = [
+            os.path.join(root, "core", "simulator.py"),
+            os.path.join(root, "core", "buckets.py"),
+            os.path.join(root, "launch", "train.py"),
+            os.path.join(root, "kernels", "gossip_update.py"),
+        ]
+    findings = []
+    for path in paths:
+        with open(path) as f:
+            findings.extend(lint_dispatch_loops(f.read(), path))
+    return findings

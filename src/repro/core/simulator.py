@@ -84,6 +84,7 @@ class DecentralizedSimulator:
         has_rng: bool = False,
         shard_nodes: bool = False,
         bucket_mb: Optional[float] = None,
+        debug_no_retrace: bool = False,
     ):
         """Args:
           loss_fn: per-node ``loss_fn(params, batch)`` (or with rng as third
@@ -144,6 +145,11 @@ class DecentralizedSimulator:
         self.round_ms: list = []
         self.deadline_overruns = 0
         self._step_cache: dict[Any, Callable] = {}
+        # debug mode (repro.analysis.recompile): invoking a WARM cached
+        # executable must never trace/compile — the zero-mid-run-recompile
+        # invariant enforced live instead of post-hoc cache counting
+        self.debug_no_retrace = bool(debug_no_retrace)
+        self._was_warm = False
         self.shard_nodes = bool(shard_nodes)
         self._sharding = (
             self._node_sharding(self.n) if self.shard_nodes else None
@@ -327,9 +333,24 @@ class DecentralizedSimulator:
             )
         if faulty:
             key = (key, "faulty")
+        self._was_warm = key in self._step_cache
         if key not in self._step_cache:
             self._step_cache[key] = self._build_step(program, faulty=faulty)
         return self._step_cache[key]
+
+    def _retrace_guard(self, warm: bool, label: str):
+        """``debug_no_retrace`` guard around a cached-executable call: a
+        warm executable invoked again must not fire a trace/compile event
+        (``repro.analysis.recompile``).  Guards ONLY the call itself —
+        eager membership-event work (admit/adopt/drain) legitimately runs
+        outside jit and must not trip the sanitizer."""
+        if not (self.debug_no_retrace and warm):
+            import contextlib
+
+            return contextlib.nullcontext()
+        from repro.analysis.recompile import assert_no_retrace
+
+        return assert_no_retrace(label)
 
     # -- bucketed, overlap-scheduled path -----------------------------------
     def _grads_fn(self):
@@ -368,6 +389,7 @@ class DecentralizedSimulator:
         adds at most a second — fault masks are runtime operands, so
         executables scale with distinct programs, never buckets × faults."""
         key = ("__bucket__", program.cache_key, width, has_m, faulty)
+        self._was_warm = key in self._step_cache
         if key not in self._step_cache:
             from repro.core.buckets import build_bucket_step
 
@@ -432,7 +454,8 @@ class DecentralizedSimulator:
             )
             if fault is not None:
                 args = args + (fault,)
-            res = fn(*args)
+            with self._retrace_guard(self._was_warm, f"bucket {b}"):
+                res = fn(*args)
             if has_m:
                 t2, m2, tok = res
                 out_m.append(m2)
@@ -554,8 +577,8 @@ class DecentralizedSimulator:
         )
         args = (state.params, state.opt_state, batch, jnp.float32(lr), rng)
         if fr is not None and not self.topology.centralized:
-            p, o, loss, norms = fn(*args, realization_arrays(fr))
-        else:
+            args = args + (realization_arrays(fr),)
+        with self._retrace_guard(self._was_warm, f"sim step {state.step}"):
             p, o, loss, norms = fn(*args)
         self._record_round(loss, t_start)
         return SimState(p, o, state.step + 1), loss, norms

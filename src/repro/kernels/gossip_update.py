@@ -80,6 +80,16 @@ def _auto_block(block, interpret):
     return (1 << 20) if interpret else 1024
 
 
+def _check_budget(deg, block, interpret):
+    """Validate the dispatch signature against the documented SMEM/VMEM
+    budgets (``analysis/budget.py``) before building the Pallas call.
+    The check is lru-cached per (deg, block) signature over there, so the
+    hot path pays one dict lookup."""
+    from repro.analysis.budget import check_kernel_budget
+
+    check_kernel_budget(int(deg), int(block), interpret=bool(interpret))
+
+
 def _mix_block(w, f, theta, nbrs, grad, mom, lr, beta, *, deg, mix_order,
                out_dtype):
     """Shared kernel math on one VMEM tile; ``w[k]`` scalar-indexes SMEM.
@@ -364,6 +374,7 @@ def fused_apply_stacked(
         had_momentum = True
     p = theta.shape[1]
     block = min(block, p)
+    _check_budget(srcs.shape[1], block, interpret)
     pad = (-p) % block
     if pad:
         theta = jnp.pad(theta, ((0, 0), (0, pad)))
@@ -439,6 +450,7 @@ def fused_bucket_update(
     m_mat = mom_b.astype(jnp.float32)
     p = theta.shape[1]
     block = min(block, max(p, 1))
+    _check_budget(srcs.shape[1], block, interpret)
     pad = (-p) % block
     if pad:
         theta = jnp.pad(theta, ((0, 0), (0, pad)))
@@ -529,6 +541,7 @@ def fused_apply_shard(
         had_momentum = True
     p = theta.shape[0]
     block = min(block, p)
+    _check_budget(srcs.shape[1], block, interpret)
     pad = (-p) % block
     if pad:
         theta = jnp.pad(theta, (0, pad))

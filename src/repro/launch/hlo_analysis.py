@@ -30,6 +30,7 @@ __all__ = [
     "analyze_hlo",
     "collective_counts",
     "assert_no_all_gather",
+    "CollectiveReport",
     "COLLECTIVE_KINDS",
 ]
 
@@ -53,7 +54,30 @@ _SHAPE_RE = re.compile(
 _DTYPE_BYTES = {
     "f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
     "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    # 8-bit floats: XLA prints a family of names (f8e4m3, f8e4m3fn,
+    # f8e5m2, f8e4m3b11fnuz, ...) — _SHAPE_RE matches them as f8\w*, and
+    # _dtype_width resolves any unlisted variant to 1 byte by bit-width.
+    "f8e4m3": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "f8e4m3fnuz": 1, "f8e5m2fnuz": 1, "f8e3m4": 1,
 }
+_WIDTH_RE = re.compile(r"^[a-z]+?(\d+)")
+
+
+def _dtype_width(dt: str) -> int:
+    """Byte width of an HLO dtype token, with a bit-width fallback.
+
+    Anything _SHAPE_RE can match but the table misses (new f8 variants,
+    future narrow types) derives its width from the leading digit group of
+    the name — f8e8m0 → 1, s4 → 1 (sub-byte rounds up) — instead of the
+    old silent ``.get(dt, 4)`` that billed every unknown dtype 4 bytes.
+    """
+    w = _DTYPE_BYTES.get(dt)
+    if w is not None:
+        return w
+    m = _WIDTH_RE.match(dt)
+    if m:
+        return max(1, int(m.group(1)) // 8)
+    return 4
 # result type is matched lazily up to the first "kind(" token: tuple types
 # contain parens and /*index=N*/ comments, so anything stricter misparses
 _OP_RE = re.compile(
@@ -79,7 +103,7 @@ def _type_bytes(type_str: str):
         n = 1
         for d in dl:
             n *= d
-        total += n * _DTYPE_BYTES.get(dt, 4)
+        total += n * _dtype_width(dt)
         if first_dims is None:
             first_dims = dl
     return total, (first_dims or [])
@@ -87,7 +111,7 @@ def _type_bytes(type_str: str):
 
 def _dtype_nbytes(type_str: str) -> int:
     m = _SHAPE_RE.search(type_str)
-    return _DTYPE_BYTES.get(m.group(1), 4) if m else 4
+    return _dtype_width(m.group(1)) if m else 4
 
 
 class _Op:
@@ -143,12 +167,56 @@ def _hlo_text_of(fn_or_hlo, *args) -> str:
     return lowered.compile().as_text()
 
 
-def collective_counts(fn_or_hlo, *args) -> dict[str, int]:
-    """Loop-aware collective-op counts of a compiled function's HLO."""
-    return analyze_hlo(_hlo_text_of(fn_or_hlo, *args)).get("coll_counts", {})
+class CollectiveReport(dict):
+    """Structured collective inventory of one compiled executable.
+
+    A dict subclass — ``report["collective-permute"]``, ``.get``, equality
+    with plain count dicts, all pre-existing callers keep working — that
+    additionally carries ``op_names``: kind → tuple of the *static* HLO op
+    names of that kind (one entry per op in the module text; the dict
+    values stay the loop-aware dynamic counts, so a permute inside a
+    trip-8 while shows count 8 but one op name).  Consumed by the
+    ``repro.analysis.collectives`` deadlock linter.
+    """
+
+    def __init__(self, counts=None, op_names=None, wire_bytes=None):
+        super().__init__(counts or {})
+        self.op_names: dict[str, tuple[str, ...]] = {
+            k: tuple(v) for k, v in (op_names or {}).items()
+        }
+        self.wire_bytes: dict[str, int] = dict(wire_bytes or {})
+
+    @property
+    def total(self) -> int:
+        return int(sum(self.values()))
+
+    def offending(self, forbid) -> dict[str, tuple[str, ...]]:
+        """kind → op names for every forbidden kind present (count > 0)."""
+        return {
+            k: self.op_names.get(k, ())
+            for k in self
+            if k in forbid and self[k]
+        }
+
+    def __repr__(self):  # pragma: no cover - debugging aid
+        return f"CollectiveReport({dict(self)!r}, op_names={self.op_names!r})"
 
 
-def assert_no_all_gather(fn_or_hlo, *args, forbid=("all-gather",)) -> dict:
+def collective_counts(fn_or_hlo, *args) -> "CollectiveReport":
+    """Loop-aware collective-op counts of a compiled function's HLO.
+
+    Returns a ``CollectiveReport`` (dict-compatible: kind → count) whose
+    ``op_names`` attribute lists the offending HLO op names per kind.
+    """
+    info = analyze_hlo(_hlo_text_of(fn_or_hlo, *args))
+    return CollectiveReport(
+        info.get("coll_counts", {}),
+        op_names=info.get("coll_ops", {}),
+        wire_bytes=info.get("wire_bytes", {}),
+    )
+
+
+def assert_no_all_gather(fn_or_hlo, *args, forbid=("all-gather",)) -> "CollectiveReport":
     """Assert the compiled HLO carries none of the ``forbid`` collectives.
 
     The acceptance bar for the sparse mixing compiler: a colorable graph
@@ -156,15 +224,17 @@ def assert_no_all_gather(fn_or_hlo, *args, forbid=("all-gather",)) -> dict:
     collective-permutes only — any all-gather means the dense GatherRow
     fallback leaked back onto the hot path.  Accepts a jitted callable plus
     its example args (lowered and compiled here) or a raw HLO string.
-    Returns the full collective-count dict for further assertions.
+    Returns the full ``CollectiveReport`` for further assertions.
     """
-    counts = collective_counts(fn_or_hlo, *args)
-    bad = {k: v for k, v in counts.items() if k in forbid and v}
+    report = collective_counts(fn_or_hlo, *args)
+    bad = {k: v for k, v in report.items() if k in forbid and v}
     if bad:
+        names = report.offending(forbid)
         raise AssertionError(
-            f"forbidden collectives in lowered HLO: {bad} (all counts: {counts})"
+            f"forbidden collectives in lowered HLO: {bad} "
+            f"(ops: {names}, all counts: {dict(report)})"
         )
-    return counts
+    return report
 
 
 def analyze_hlo(text: str) -> dict:
@@ -191,9 +261,22 @@ def analyze_hlo(text: str) -> dict:
             "traffic": 0.0,
             "dot_flops": 0.0,
             "coll_count": defaultdict(float),
+            "coll_ops": defaultdict(list),
         }
         if cname in seen or cname not in comps:
             return out
+
+        def merge_sub(sub, mult=1):
+            for k in ("traffic", "dot_flops"):
+                out[k] += mult * sub[k]
+            for k, v in sub["wire"].items():
+                out["wire"][k] += mult * v
+            for k, v in sub["coll_count"].items():
+                out["coll_count"][k] += mult * v
+            # op names are static module text — never loop-multiplied
+            for k, v in sub["coll_ops"].items():
+                out["coll_ops"][k].extend(v)
+
         for op in comps[cname]:
             if op.kind == "while":
                 n = 1
@@ -203,13 +286,7 @@ def analyze_hlo(text: str) -> dict:
                 for sub_re in (_BODY_RE, _COND_RE):
                     sm = sub_re.search(op.attrs)
                     if sm:
-                        sub = comp_cost(sm.group(1), seen + (cname,))
-                        for k in ("traffic", "dot_flops"):
-                            out[k] += n * sub[k]
-                        for k, v in sub["wire"].items():
-                            out["wire"][k] += n * v
-                        for k, v in sub["coll_count"].items():
-                            out["coll_count"][k] += n * v
+                        merge_sub(comp_cost(sm.group(1), seen + (cname,)), n)
                 continue
             if op.kind in ("conditional",):
                 branches = _BRANCHES_RE.search(op.attrs)
@@ -217,25 +294,13 @@ def analyze_hlo(text: str) -> dict:
                     _OPERAND_RE.findall(branches.group(1)) if branches else []
                 ) or _CALLS_RE.findall(op.attrs)
                 for cn in names:
-                    sub = comp_cost(cn, seen + (cname,))
-                    for k in ("traffic", "dot_flops"):
-                        out[k] += sub[k]
-                    for k, v in sub["wire"].items():
-                        out["wire"][k] += v
-                    for k, v in sub["coll_count"].items():
-                        out["coll_count"][k] += v
+                    merge_sub(comp_cost(cn, seen + (cname,)))
                 continue
             if op.kind == "call":
                 for cn in _CALLS_RE.findall(op.attrs):
                     if cn in fused_comps:
                         continue
-                    sub = comp_cost(cn, seen + (cname,))
-                    for k in ("traffic", "dot_flops"):
-                        out[k] += sub[k]
-                    for k, v in sub["wire"].items():
-                        out["wire"][k] += v
-                    for k, v in sub["coll_count"].items():
-                        out["coll_count"][k] += v
+                    merge_sub(comp_cost(cn, seen + (cname,)))
                 continue
 
             if op.kind in COLLECTIVE_KINDS or op.kind.rstrip("-start") in COLLECTIVE_KINDS:
@@ -245,6 +310,7 @@ def analyze_hlo(text: str) -> dict:
                 wire = 2 * op.rbytes if kind == "all-reduce" else op.rbytes
                 out["wire"][kind] += wire
                 out["coll_count"][kind] += 1
+                out["coll_ops"][kind].append(op.name)
                 out["traffic"] += op.rbytes + sum(
                     def_bytes.get(o, 0) for o in op.operands
                 )
@@ -313,6 +379,7 @@ def analyze_hlo(text: str) -> dict:
     return {
         "wire_bytes": {k: int(v) for k, v in cost["wire"].items()},
         "coll_counts": {k: int(v) for k, v in cost["coll_count"].items()},
+        "coll_ops": {k: tuple(v) for k, v in cost["coll_ops"].items()},
         "total_wire_bytes": int(sum(cost["wire"].values())),
         "traffic_bytes": float(cost["traffic"]),
         "dot_flops": float(cost["dot_flops"]),

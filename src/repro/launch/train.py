@@ -142,6 +142,7 @@ class SPMDTrainer:
         fused_apply: bool = False,
         donate: bool = True,
         bucket_mb: Optional[float] = None,
+        debug_no_retrace: bool = False,
     ):
         """mix_every: gossip once every H optimizer steps (local-SGD ×
         decentralized; beyond-paper — the limit of the paper's Obs. 5 that
@@ -270,7 +271,22 @@ class SPMDTrainer:
         self.defs = tfm.model_defs(cfg, tp_size=tp)
         self.loss_fn = loss_fn or (lambda p, b: tfm.loss_fn(p, cfg, b))
         self._step_cache: dict[Any, Any] = {}
+        # debug mode (repro.analysis.recompile): a warm cached executable
+        # invoked again must never trace/compile
+        self.debug_no_retrace = bool(debug_no_retrace)
+        self._was_warm = False
         self._build_shardings()
+
+    def _retrace_guard(self, warm: bool, label: str):
+        """``debug_no_retrace`` guard around a warm cached-executable call
+        (see ``DecentralizedSimulator._retrace_guard``)."""
+        if not (self.debug_no_retrace and warm):
+            import contextlib
+
+            return contextlib.nullcontext()
+        from repro.analysis.recompile import assert_no_retrace
+
+        return assert_no_retrace(label)
 
     # -- mixing program -------------------------------------------------------
     def _one_program(self, step: int, epoch: int) -> Optional[GossipProgram]:
@@ -822,6 +838,7 @@ class SPMDTrainer:
         key = None if program is None else program.cache_key
         if faulty:
             key = (key, "faulty")
+        self._was_warm = key in self._step_cache
         if key in self._step_cache:
             return self._step_cache[key]
 
@@ -1020,7 +1037,13 @@ class SPMDTrainer:
             from repro.core.faults import realization_arrays
 
             args = args + (realization_arrays(fr),)
-        with _set_mesh(self.mesh):
+        # a warm _LazyStep that has not built yet still traces legitimately
+        warm = self._was_warm and (
+            not isinstance(fn, _LazyStep) or fn._fn is not None
+        )
+        with _set_mesh(self.mesh), self._retrace_guard(
+            warm, f"spmd step {state.step}"
+        ):
             p, o, loss, norms = fn(*args)
         self._record_round(loss, t_start)
         return TrainState(p, o, state.step + 1), loss, norms

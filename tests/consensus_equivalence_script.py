@@ -26,6 +26,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.recompile import assert_executables_preenumerated
 from repro.configs import get_config
 from repro.core.dsgd import make_topology
 from repro.core.simulator import DecentralizedSimulator
@@ -63,7 +64,7 @@ for t in range(STEPS):
     batch = {k: jnp.asarray(v) for k, v in src.stacked(G, t, 2).items()}
     state, loss, _ = trainer.train_step(state, batch, lr_at(t), epoch=0)
 
-used = set(trainer._step_cache)
+used = assert_executables_preenumerated(trainer)
 assert used <= allowed, f"executables beyond the ladder: {used - allowed}"
 
 # --- simulator oracle ------------------------------------------------------

@@ -29,6 +29,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.recompile import assert_executables_preenumerated
 from repro.configs import get_config
 from repro.core.dsgd import make_topology
 from repro.core.faults import make_fault_model
@@ -79,7 +80,7 @@ for kind, kw in [
     for t in range(STEPS):
         batch = {k: jnp.asarray(v) for k, v in src.stacked(G, t, 2).items()}
         state, loss, _ = trainer.train_step(state, batch, 0.05, epoch=0)
-    used = {k[0] for k in trainer._step_cache if isinstance(k, tuple)}
+    used = assert_executables_preenumerated(trainer)
     assert used <= allowed, f"{kind}: executables beyond the set: {used - allowed}"
     if kind in ("dropout", "concurrent", "join", "deadline"):
         # transient masks, composed concurrent crashes, spare-rank joins,

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis.recompile import assert_executables_preenumerated
 from repro.core.ada import AdaSchedule
 from repro.core.consensus import ConsensusController
 from repro.core.dsgd import make_topology
@@ -175,6 +176,7 @@ def test_concurrent_compiles_no_more_executables_than_fault_free():
         for _ in range(10):
             b = jnp.asarray(rng.normal(size=(8, 2, 3)).astype(np.float32))
             state, _, _ = sim.train_step(state, b, 0.05)
+        assert_executables_preenumerated(sim)
         return len(sim._step_cache)
 
     base = _run(None)
@@ -346,11 +348,8 @@ def test_join_compiles_only_predeclared_sizes():
         m = fm.n_at(t)
         b = jnp.asarray(rng.normal(size=(m, 2, 3)).astype(np.float32))
         state, _, _ = sim.train_step(state, b, 0.05)
-    used = {k for k in sim._step_cache if not isinstance(k, tuple) or
-            not str(k[0]).startswith("__")}
-    used_programs = {k[0] if isinstance(k, tuple) and k[1] == "faulty" else k
-                     for k in used}
-    assert used_programs <= allowed
+    used = assert_executables_preenumerated(sim)
+    assert used <= allowed
 
 
 def test_joining_node_adopts_neighbor_average():

@@ -18,6 +18,9 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
+from repro.analysis.recompile import (
+    assert_executables_preenumerated, assert_no_retrace,
+)
 from repro.core.consensus import consensus_distance_masked_jit
 from repro.core.dsgd import make_topology
 from repro.core.faults import (
@@ -261,7 +264,8 @@ def test_fused_kernel_consumes_runtime_rows_without_retrace():
     mom = {"w": jax.random.normal(kp[2], (8, 96))}
     rng = np.random.default_rng(1)
     _gossip_program_update._clear_cache()
-    for t in range(5):
+
+    def sweep_step(t):
         alive = rng.random(8) > 0.3
         alive[0] = True
         fault = {
@@ -273,7 +277,17 @@ def test_fused_kernel_consumes_runtime_rows_without_retrace():
             prog, params, grads, mom, lr=0.01 + 0.01 * t, beta=0.9,
             fault=fault, block=96,
         )
-    fused_apply_stacked(prog, params, grads, mom, lr=0.07, beta=0.9, block=96)
+
+    # warm-up: one faulty + one fault-free call (the all-ones row is built
+    # host-side on first fault-free use) — then a hard zero-retrace window
+    sweep_step(0)
+    fused_apply_stacked(prog, params, grads, mom, lr=0.03, beta=0.9, block=96)
+    with assert_no_retrace("fused-kernel realization sweep"):
+        for t in range(1, 5):
+            sweep_step(t)
+        fused_apply_stacked(
+            prog, params, grads, mom, lr=0.07, beta=0.9, block=96
+        )
     assert _gossip_program_update._cache_size() == 1
 
 
@@ -320,9 +334,21 @@ def test_zero_recompile_invariant_under_transient_faults(topo_name):
         topo = make_topology(topo_name, n, fault_model=fault_model)
         sim = DecentralizedSimulator(_quad_loss, sgd(momentum=0.9), topo)
         state = sim.init({"w": jnp.zeros(4)})
-        for t in range(3 * one_peer_period(n)):
+        period = one_peer_period(n)
+
+        def step(state, t):
             b = jax.random.normal(jax.random.PRNGKey(t), (n, 2, 4))
             state, *_ = sim.train_step(state, b, 0.05)
+            return state
+
+        # warm-up: one executable per distinct program (realizations are
+        # runtime masks — they share it), then a hard zero-retrace window
+        for t in range(period):
+            state = step(state, t)
+        with assert_no_retrace(f"{topo_name} steady state"):
+            for t in range(period, 3 * period):
+                state = step(state, t)
+        assert_executables_preenumerated(sim)
         return len(sim._step_cache)
 
     fault_free = run(None)
@@ -421,8 +447,8 @@ def test_crash_freezes_victim_and_rejoin_adopts_neighbor_average():
             rejoin_checked = True
     assert rejoin_checked
     # cache bound: every executable keyed by a pre-enumerated program
-    used = {k[0] for k in sim._step_cache if isinstance(k, tuple)}
-    assert used and used <= allowed
+    used = assert_executables_preenumerated(sim)
+    assert used <= allowed
 
 
 def test_controller_rearms_on_membership_change():
