@@ -136,6 +136,7 @@ def run(steps: int = 120, seeds=(0, 1, 2), quick: bool = False) -> list[Row]:
     us = {l: [] for l in labels}
     comms = {l: [] for l in labels}
     handoffs = {l: [] for l in labels}
+    recorders = {}
     for seed in seeds:
         res = sweep_topologies(
             loss_fn=mini_resnet_loss,
@@ -159,6 +160,8 @@ def run(steps: int = 120, seeds=(0, 1, 2), quick: bool = False) -> list[Row]:
             ctl = r["topology"].controller
             if ctl is not None:
                 handoffs[label].append(ctl.handoff_step)
+            # last seed's recorder stamps the committed entry's provenance
+            recorders[f"{label}/n{N}"] = r["telemetry"]
 
     rows, payload, frontier = [], {}, {}
     for label in labels:
@@ -194,5 +197,5 @@ def run(steps: int = 120, seeds=(0, 1, 2), quick: bool = False) -> list[Row]:
             ),
         }
     save_json("ada", payload)
-    save_bench_section("ada", frontier)
+    save_bench_section("ada", frontier, telemetry=recorders)
     return rows

@@ -39,7 +39,7 @@ def save_json(name: str, payload) -> str:
 BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_step_time.json")
 
 
-def save_bench_section(section: str, payload) -> str:
+def save_bench_section(section: str, payload, telemetry=None) -> str:
     """Merge one section into the committed BENCH_step_time.json artifact.
 
     Unlike benchmarks/results/ (generated, untracked), this file IS
@@ -50,9 +50,25 @@ def save_bench_section(section: str, payload) -> str:
     The payload is schema-gated through the static verifier before any
     write: a malformed section would silently corrupt the cross-PR
     trajectory at merge time, long after the run that produced it.
+
+    ``telemetry`` stamps recorder provenance into the entries so the
+    committed numbers are traceable to the run that measured them:
+    either one ``MetricsRecorder`` (applied to every entry) or a
+    ``{key: recorder}`` map aligned with the payload's keys.  Entries
+    without a recorder are left untouched.
     """
     from repro.analysis.invariants import verify_bench_payload
 
+    if telemetry is not None and isinstance(payload, dict):
+        recs = (
+            telemetry if isinstance(telemetry, dict)
+            else {k: telemetry for k in payload}
+        )
+        for k, rec in recs.items():
+            if rec is None or k not in payload:
+                continue
+            if isinstance(payload[k], dict):
+                payload[k] = {**payload[k], "provenance": rec.provenance()}
     verify_bench_payload(section, payload)
     path = os.path.abspath(BENCH_PATH)
     data = {}
@@ -100,13 +116,19 @@ def sweep_topologies(
     hyperparameters (``topo_kwargs`` is keyed by label) — e.g. open-loop vs
     closed-loop Ada in the frontier sweep.
     """
+    from repro.telemetry import MemorySink, MetricsRecorder
+
     out = {}
     for entry in topologies:
         label, name = (entry, entry) if isinstance(entry, str) else entry
         kw = (topo_kwargs or {}).get(label, {})
         topo = make_topology(name, n_nodes, **kw)
+        # counters/events only — record_spans stays False so the recorder
+        # never syncs on loss mid-run and us_per_step is unperturbed
+        recorder = MetricsRecorder(sinks=[MemorySink()], metrics_every=0)
         sim = DecentralizedSimulator(
-            loss_fn, optimizer, topo, collect_norms=collect_norms
+            loss_fn, optimizer, topo, collect_norms=collect_norms,
+            telemetry=recorder,
         )
         # capture BEFORE the run: a closed-loop controller's graph_at
         # follows its live rung, which ends the run at the final graph
@@ -137,5 +159,9 @@ def sweep_topologies(
             # the run's Topology: closed-loop controllers carry the realized
             # schedule trace, which comm accounting replays
             "topology": topo,
+            # the run's MetricsRecorder: measured comm-bytes/permute
+            # counters + controller events, ready for save_bench_section's
+            # telemetry= provenance pathway
+            "telemetry": recorder,
         }
     return out

@@ -62,6 +62,7 @@ from repro.core.simulator import DecentralizedSimulator
 from repro.models.common import init_params
 from repro.models.paper_models import mini_resnet_defs, mini_resnet_loss
 from repro.optim.sgd import sgd
+from repro.telemetry import MemorySink, MetricsRecorder
 
 N = 16
 STEPS_PER_EPOCH = 5
@@ -77,8 +78,12 @@ def _run_one(topo_name: str, fault_kind: str, rate: float, steps: int,
         down_steps=steps // 2 if fault_kind == "crash" else None,
     )
     topo = make_topology(topo_name, N, fault_model=fm)
+    # counters/events only (record_spans=False): the recorder must not sync
+    # on loss mid-run or the us_per_step column would absorb the overhead
+    rec = MetricsRecorder(sinks=[MemorySink()], metrics_every=0)
     sim = DecentralizedSimulator(
-        mini_resnet_loss, sgd(momentum=0.9), topo, collect_norms=False
+        mini_resnet_loss, sgd(momentum=0.9), topo, collect_norms=False,
+        telemetry=rec,
     )
     state = sim.init(params0)
     key = jax.random.PRNGKey(seed)
@@ -101,9 +106,11 @@ def _run_one(topo_name: str, fault_kind: str, rate: float, steps: int,
                 state.params, jnp.asarray(alive, jnp.float32)
             ))
             xi_trace.append([t, xi])
+            rec.gauge("xi", xi, step=t)
     acc = float(_eval_fn(state.mean_params()))
     comm = _total_comm(topo, steps, params0)
     return {
+        "_telemetry": rec,
         "acc": acc,
         "xi_trace": xi_trace,
         # median per-step time: compile-at-first-use steps (one per distinct
@@ -132,9 +139,10 @@ def _run_elastic_one(topo_name: str, fault_kind: str, steps: int, params0, *,
     fkw = dict(fkw or {})
     fm = make_fault_model(fault_kind, n, seed=seed, **fkw)
     topo = make_topology(topo_name, n, fault_model=fm, **dict(tkw or {}))
+    rec = MetricsRecorder(sinks=[MemorySink()], metrics_every=0)
     sim = DecentralizedSimulator(
         mini_resnet_loss, sgd(momentum=0.9), topo, mixing=mixing,
-        shard_nodes=shard_nodes, collect_norms=False,
+        shard_nodes=shard_nodes, collect_norms=False, telemetry=rec,
     )
     state = sim.init(params0)
     key = jax.random.PRNGKey(seed)
@@ -154,11 +162,12 @@ def _run_elastic_one(topo_name: str, fault_kind: str, steps: int, params0, *,
             alive = fm.at(t).alive if fm is not None else np.ones(sim.n, bool)
             # float drain boosts are still alive; Xi is over membership
             mask = jnp.asarray(np.asarray(alive) != 0, jnp.float32)
-            xi_trace.append([t, float(
-                consensus_distance_masked_jit(state.params, mask)
-            )])
+            xi = float(consensus_distance_masked_jit(state.params, mask))
+            xi_trace.append([t, xi])
+            rec.gauge("xi", xi, step=t)
     acc = float(_eval_fn(state.mean_params()))
     out = {
+        "_telemetry": rec,
         "acc": acc,
         "xi_trace": xi_trace,
         "us_per_step": float(np.median(step_us)),
@@ -297,8 +306,11 @@ def run(steps: int = 120, quick: bool = False) -> list[Row]:
                 f" comm_MB={res['comm_bytes_per_node'] / 2**20:.1f}",
             )
         )
+    # recorders ride the result dicts host-side only — pop before the JSON
+    # writes, then stamp each committed entry's provenance from its run
+    recs = {k: v.pop("_telemetry", None) for k, v in payload.items()}
     save_json("faults", payload)
-    save_bench_section("faults", payload)
+    save_bench_section("faults", payload, telemetry=recs)
     return rows
 
 
@@ -379,8 +391,9 @@ def run_elastic(steps: int = 120, quick: bool = False) -> list[Row]:
         )
         for key, res in payload.items()
     ]
+    recs = {k: v.pop("_telemetry", None) for k, v in payload.items()}
     save_json("elastic", payload)
-    save_bench_section("elastic", payload)
+    save_bench_section("elastic", payload, telemetry=recs)
     return rows
 
 

@@ -1,6 +1,6 @@
 """``python -m repro.analysis`` — the static-analysis pipeline CLI.
 
-Runs the four passes over every program the benchmarked topology matrix
+Runs the five passes over every program the benchmarked topology matrix
 can emit (ring / star / one-peer-exp / random-matching × fault-free,
 transient, permanent-crash, preemption, deadline, join and spare-rank
 realizations):
@@ -15,6 +15,11 @@ realizations):
                  ``assert_no_retrace`` after warm-up + executable-set
                  pre-enumeration)
   --budget       Pallas kernel SMEM/VMEM budget checker
+  --telemetry    telemetry-schema pass: a 2-node smoke run streams every
+                 record kind through the schema validator, the rendered
+                 summary is checked, and the telemetry-on executable set
+                 must equal the telemetry-off one (the recorder is
+                 provably free)
 
 ``--all`` (the CI entry point) runs everything.  Exit status 1 when any
 pass reports findings.
@@ -233,11 +238,87 @@ def run_budget():
     return run_pass("budget", subjects)
 
 
+def run_telemetry():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.report import run_pass
+    from repro.core.dsgd import make_topology
+    from repro.core.simulator import DecentralizedSimulator
+    from repro.optim.sgd import sgd
+    from repro.telemetry import MemorySink, MetricsRecorder
+    from repro.telemetry.schema import SchemaError, validate_record
+    from repro.telemetry.summarize import render_summary, summarize
+
+    def _quad_loss(p, b):
+        return jnp.mean((b - p["w"]) ** 2)
+
+    def _drive(telemetry=None, n=2, steps=6):
+        topo = make_topology("d_ring", n)
+        sim = DecentralizedSimulator(
+            _quad_loss, sgd(momentum=0.9), topo, telemetry=telemetry,
+            collect_norms=True,
+        )
+        state = sim.init({"w": jnp.zeros(4)})
+        for t in range(steps):
+            b = jax.random.normal(jax.random.PRNGKey(t), (n, 2, 4))
+            state, *_ = sim.train_step(state, b, 0.05)
+        return sim
+
+    def smoke():
+        sink = MemorySink()
+        rec = MetricsRecorder(
+            sinks=[sink], metrics_every=1, record_spans=True
+        )
+        rec.manifest({"engine": "simulator", "n": 2})
+        _drive(telemetry=rec)
+        for r in sink.records:
+            validate_record(r)
+        kinds = {r["kind"] for r in sink.records}
+        missing = {"manifest", "counter", "gauge", "span", "variance"} - kinds
+        assert not missing, f"smoke run missing record kinds: {missing}"
+        out = render_summary(summarize([dict(r) for r in sink.records]))
+        assert "comm MiB" in out and "per-layer variance" in out
+
+    def parity():
+        off = _drive()
+        on = _drive(telemetry=MetricsRecorder(
+            sinks=[MemorySink()], metrics_every=1, record_spans=True
+        ))
+        k_off = sorted(map(str, off._step_cache))
+        k_on = sorted(map(str, on._step_cache))
+        assert k_on == k_off, (
+            f"telemetry changed the executable set: "
+            f"{len(k_off)} -> {len(k_on)}"
+        )
+
+    def rejects():
+        for bad in (
+            {"kind": "nope"},
+            {"kind": "counter", "step": 0, "name": "x", "inc": 1},
+            {"kind": "gauge", "step": 0, "name": "xi", "value": 1.0,
+             "extra": 2},
+        ):
+            try:
+                validate_record(bad)
+            except SchemaError:
+                continue
+            raise AssertionError(f"schema accepted malformed record {bad!r}")
+
+    subjects = [
+        ("2-node smoke run + stream validation", smoke),
+        ("executable-set parity on/off", parity),
+        ("malformed records rejected", rejects),
+    ]
+    return run_pass("telemetry-schema", subjects)
+
+
 PASSES = {
     "invariants": run_invariants,
     "collectives": run_collectives,
     "recompile": run_recompile,
     "budget": run_budget,
+    "telemetry": run_telemetry,
 }
 
 

@@ -392,3 +392,32 @@ def verify_bench_payload(section: str, payload) -> None:
             json.dumps(entry, allow_nan=False)
         except (TypeError, ValueError) as e:
             _fail(subject, f"entry {key!r} is not JSON-serializable: {e}")
+        prov = entry.get("provenance")
+        if prov is not None:
+            _verify_bench_provenance(subject, key, prov)
+
+
+def _verify_bench_provenance(subject: str, key: str, prov) -> None:
+    """``provenance`` entries come from ``MetricsRecorder.provenance()``
+    via ``save_bench_section(..., telemetry=)`` — pin their shape so a
+    half-initialized recorder can't stamp garbage into the committed
+    trajectory."""
+    if not isinstance(prov, dict):
+        _fail(subject, f"entry {key!r} provenance must be a dict")
+    if prov.get("source") != "telemetry":
+        _fail(subject, f"entry {key!r} provenance source must be 'telemetry'")
+    if not isinstance(prov.get("schema"), int):
+        _fail(subject, f"entry {key!r} provenance schema must be an int")
+    counters = prov.get("counters")
+    if not isinstance(counters, dict) or not all(
+        isinstance(k, str) and isinstance(v, (int, float))
+        and not isinstance(v, bool)
+        for k, v in counters.items()
+    ):
+        _fail(
+            subject,
+            f"entry {key!r} provenance counters must map str -> number",
+        )
+    for field in ("rounds", "events"):
+        if not isinstance(prov.get(field), int):
+            _fail(subject, f"entry {key!r} provenance {field} must be an int")

@@ -231,6 +231,10 @@ class ConsensusController:
         # through rearm() (unlike xi0) so a membership event cannot hide
         # the very spike it causes from the spike trigger
         self._spike_ref: Optional[float] = None
+        # run-telemetry recorder (engines bind theirs): transitions and
+        # rearm/redensify reasons route through it so both engines share
+        # one event stream with identical coalescing semantics
+        self._recorder = None
         n = self.schedule.n_nodes
         floor = (
             2
@@ -311,6 +315,7 @@ class ConsensusController:
         ):
             self.rung -= 1
             self.transitions.append((int(step), self.rung))
+            self._emit_transition(step)
             self._log_event(step, "redensify")
             # re-seed the phase on the denser rung at the spiked level:
             # both references restart, so this spike is consumed
@@ -337,6 +342,7 @@ class ConsensusController:
         if fired:
             self.rung += 1
             self.transitions.append((int(step), self.rung))
+            self._emit_transition(step)
             self.xi0 = None  # re-arm the phase reference on the new rung
             self._spike_ref = None  # sparser graphs run hotter: new baseline
         self.trace.append((int(step), xi, self.rung))
@@ -369,15 +375,35 @@ class ConsensusController:
         self.xi0 = None
         self._log_event(step, reason)
 
+    def bind_recorder(self, recorder) -> None:
+        """Attach the run's :class:`repro.telemetry.MetricsRecorder`: every
+        transition/rearm/redensify log entry is mirrored as a telemetry
+        event.  Both engines bind at construction (and the simulator
+        re-binds after an elastic ``_admit`` rebuilds the controller), so
+        the event stream — coalescing included — is engine-independent."""
+        self._recorder = recorder
+
+    def _emit_transition(self, step: int) -> None:
+        if self._recorder is not None:
+            self._recorder.event(
+                "transition", int(step),
+                data={"rung": int(self.rung), "k": str(self.current)},
+            )
+
     def _log_event(self, step: int, reason: str) -> None:
-        """Append to ``events``, coalescing same-step reasons into "a+b"."""
-        step = int(step)
-        if self.events and self.events[-1][0] == step:
-            prev = self.events[-1][1]
-            if str(reason) not in prev.split("+"):
-                self.events[-1] = (step, f"{prev}+{reason}")
-            return
-        self.events.append((step, str(reason)))
+        """Append to ``events``, coalescing same-step reasons into "a+b".
+
+        The merge itself is the shared implementation in
+        ``repro.telemetry.coalesce_into``; when the coalesced entry
+        changes, the merged reason is re-emitted as a ``controller``
+        telemetry event (consumers keep the last emission per step)."""
+        from repro.telemetry import coalesce_into
+
+        merged = coalesce_into(self.events, int(step), str(reason))
+        if merged is not None and self._recorder is not None:
+            self._recorder.event(
+                "controller", int(step), data={"reason": merged}
+            )
 
     # -- resume / adoption ----------------------------------------------------
     def state_dict(self) -> dict:

@@ -28,7 +28,6 @@ unchanged.
 from __future__ import annotations
 
 import dataclasses
-import time
 from collections import deque
 from typing import Any, Callable, Iterator, Optional
 
@@ -85,6 +84,7 @@ class DecentralizedSimulator:
         shard_nodes: bool = False,
         bucket_mb: Optional[float] = None,
         debug_no_retrace: bool = False,
+        telemetry=None,
     ):
         """Args:
           loss_fn: per-node ``loss_fn(params, batch)`` (or with rng as third
@@ -138,12 +138,24 @@ class DecentralizedSimulator:
         self.has_rng = has_rng
         self.fault_model = topology.fault_model
         self._last_membership = None
-        # observational wall-clock trace for deadline runs: the seeded model
-        # drives the masks (determinism + engine equivalence), the engine
-        # just records measured per-round durations against the deadline
-        self._deadline_ms = getattr(self.fault_model, "deadline_ms", None)
-        self.round_ms: list = []
-        self.deadline_overruns = 0
+        # unified run telemetry (repro.telemetry): counters/gauges/spans/
+        # events for sink-attached runs, and the observational wall-clock
+        # deadline trace for deadline runs — the seeded model drives the
+        # masks (determinism + engine equivalence), the recorder just logs
+        # measured per-round durations against the deadline.  The default
+        # recorder has no sinks and costs nothing on the hot path.
+        from repro.telemetry import MetricsRecorder
+
+        self.telemetry = (
+            telemetry if telemetry is not None else MetricsRecorder()
+        )
+        self.telemetry.configure(
+            deadline_ms=getattr(self.fault_model, "deadline_ms", None)
+        )
+        if topology.controller is not None:
+            topology.controller.bind_recorder(self.telemetry)
+        self._pn_bytes: Optional[int] = None
+        self._last_program = None
         self._step_cache: dict[Any, Callable] = {}
         # debug mode (repro.analysis.recompile): invoking a WARM cached
         # executable must never trace/compile — the zero-mid-run-recompile
@@ -177,6 +189,49 @@ class DecentralizedSimulator:
         # mixing step's dispatches; valid for a probe at _folded_for_step
         self._folded_sq = None
         self._folded_for_step = -1
+        # grads stashed by the bucketed path for the grad-norm gauge at
+        # metrics-due steps (cleared after each emission)
+        self._pending_grads = None
+
+    # -- telemetry views -------------------------------------------------------
+    # round_ms / deadline_overruns were per-engine lists before the shared
+    # recorder existed; they stay as thin views for backward compatibility.
+    @property
+    def round_ms(self) -> list:
+        return self.telemetry.round_ms
+
+    @property
+    def deadline_overruns(self) -> int:
+        return self.telemetry.deadline_overruns
+
+    @property
+    def _deadline_ms(self):
+        return self.telemetry.deadline_ms
+
+    def _per_node_bytes(self, params: PyTree) -> int:
+        """Per-node parameter bytes P for comm billing (stacked leaves
+        carry the node axis first)."""
+        if self._pn_bytes is None:
+            self._pn_bytes = sum(
+                int(np.prod(x.shape[1:])) * x.dtype.itemsize
+                for x in jax.tree.leaves(params)
+            )
+        return self._pn_bytes
+
+    def _bill_comm(self, program, params: PyTree, step: int, fr) -> None:
+        """Bill one mixing-program application at dispatch time (bytes on
+        the wire + permute count), matching the offline replay accounting
+        in ``benchmarks/ada.py::_total_comm``."""
+        if program is None or not self.telemetry.active:
+            return
+        alive = link = None
+        if fr is not None:
+            alive = np.asarray(fr.alive, np.float64)
+            link = fr.link_up
+        self.telemetry.comm(
+            program, self._per_node_bytes(params), step=step,
+            alive=alive, link_up=link,
+        )
 
     @staticmethod
     def _node_sharding(n: int):
@@ -333,6 +388,7 @@ class DecentralizedSimulator:
             )
         if faulty:
             key = (key, "faulty")
+        self._last_program = program  # comm billing reuses this resolution
         self._was_warm = key in self._step_cache
         if key not in self._step_cache:
             self._step_cache[key] = self._build_step(program, faulty=faulty)
@@ -434,6 +490,13 @@ class DecentralizedSimulator:
             )
         layout = self._bucket_layout
         loss, grads, norms = self._grads_fn()(state.params, batch, rng)
+        # the bucketed path is the one place grads materialize outside the
+        # fused step executable — stash them for the grad-norm gauge (host
+        # work deferred to the post-step metrics emission, after the loss
+        # sync, so the bucket dispatch chain is not delayed)
+        self._pending_grads = (
+            grads if self.telemetry.due(state.step) else None
+        )
         has_m = state.opt_state != ()
         t_mats = layout.split_stacked(state.params)
         g_mats = layout.split_stacked(grads)
@@ -444,6 +507,7 @@ class DecentralizedSimulator:
         out_t, out_m = [], []
         window: deque = deque()
         for b, w in enumerate(layout.widths):
+            tb = self.telemetry.span_start()
             if len(window) >= MAX_INFLIGHT_BUCKETS:
                 jax.block_until_ready(window.popleft())
             fn = self._bucket_fn(program, w, has_m, fault is not None)
@@ -463,6 +527,7 @@ class DecentralizedSimulator:
                 t2, tok = res
             out_t.append(t2)
             window.append(tok)
+            self.telemetry.bucket_span(tb, step=state.step, index=b)
         new_params = self._place(layout.merge_stacked(out_t, state.params))
         new_opt = (
             self._place(layout.merge_stacked(out_m, state.opt_state))
@@ -490,14 +555,16 @@ class DecentralizedSimulator:
         Returns:
           (new_state, per_node_loss (n,), per_node_norms (n, n_leaves)).
         """
-        t_start = (
-            time.perf_counter() if self._deadline_ms is not None else None
-        )
+        tel = self.telemetry
+        t_start = tel.round_start()
         fr = None
         if self.fault_model is not None:
             fr = self.fault_model.at(state.step)
             if fr.joins:
                 # elastic growth: resize the family, then admit the newcomers
+                if tel.active:
+                    tel.event("join", state.step,
+                              data={"nodes": sorted(int(j) for j in fr.joins)})
                 state = self._admit(state, fr, epoch)
             for node in fr.rejoin:
                 # elastic re-entry: adopt the alive neighbors' average
@@ -505,6 +572,8 @@ class DecentralizedSimulator:
                     self.topology, fr, node, step=state.step, epoch=epoch,
                     mix_every=self.mix_every,
                 )
+                if tel.active:
+                    tel.event("rejoin", state.step, data={"node": int(node)})
                 state = SimState(
                     adopt_neighbor_average(state.params, node, nbrs),
                     adopt_neighbor_average(state.opt_state, node, nbrs),
@@ -517,6 +586,8 @@ class DecentralizedSimulator:
                     self.topology, fr, node, step=state.step, epoch=epoch,
                     mix_every=self.mix_every,
                 )
+                if tel.active:
+                    tel.event("depart", state.step, data={"node": int(node)})
                 state = SimState(
                     drain_handoff(state.params, node, nbrs, fr.alive),
                     drain_handoff(state.opt_state, node, nbrs, fr.alive),
@@ -524,9 +595,19 @@ class DecentralizedSimulator:
                 )
         ctl = self.topology.controller
         if self.fault_model is not None:
+            prev_membership = self._last_membership
             self._last_membership = track_membership(
                 self._last_membership, fr, ctl, state.step
             )
+            if (
+                tel.active
+                and prev_membership is not None
+                and self._last_membership != prev_membership
+            ):
+                tel.event(
+                    "membership", state.step,
+                    data={"alive": [bool(b) for b in self._last_membership]},
+                )
         if ctl is not None and ctl.should_probe(state.step):
             if fr is not None:
                 from repro.core.consensus import consensus_distance_masked_jit
@@ -548,6 +629,8 @@ class DecentralizedSimulator:
                 from repro.core.consensus import consensus_distance_jit
 
                 xi = consensus_distance_jit(state.params)
+            if tel.active:
+                tel.gauge("xi", float(xi), step=state.step)
             ctl.observe(float(xi), state.step)
         mix = (state.step + 1) % self.mix_every == 0
         # index time-varying schedules by gossip round (see SPMDTrainer):
@@ -566,35 +649,47 @@ class DecentralizedSimulator:
                 state.step // self.mix_every, epoch, palive
             )
             if program is not None:
+                self._bill_comm(program, state.params, state.step, fr)
                 fault = realization_arrays(fr) if fr is not None else None
                 p, o, loss, norms = self._bucketed_step(
                     state, batch, lr, rng, program, fault
                 )
-                self._record_round(loss, t_start)
+                self._finish_round(
+                    loss, norms, t_start, step=state.step, mix=True, lr=lr
+                )
                 return SimState(p, o, state.step + 1), loss, norms
         fn = self._step_for(
             state.step // self.mix_every, epoch, mix=mix, program_alive=palive
         )
+        if mix and not self.topology.centralized:
+            self._bill_comm(self._last_program, state.params, state.step, fr)
         args = (state.params, state.opt_state, batch, jnp.float32(lr), rng)
         if fr is not None and not self.topology.centralized:
             args = args + (realization_arrays(fr),)
         with self._retrace_guard(self._was_warm, f"sim step {state.step}"):
             p, o, loss, norms = fn(*args)
-        self._record_round(loss, t_start)
+        self._finish_round(loss, norms, t_start, step=state.step, mix=mix, lr=lr)
         return SimState(p, o, state.step + 1), loss, norms
 
-    def _record_round(self, loss, t_start) -> None:
-        """Measured wall-clock round trace for deadline runs: blocks on the
-        loss so the duration covers the whole dispatched round, then counts
-        it against the model's ``deadline_ms``.  Purely observational —
-        the averaging masks stay seeded."""
-        if t_start is None:
-            return
-        jax.block_until_ready(loss)
-        ms = (time.perf_counter() - t_start) * 1e3
-        self.round_ms.append(ms)
-        if ms > float(self._deadline_ms):
-            self.deadline_overruns += 1
+    def _finish_round(self, loss, norms, t_start, *, step: int, mix: bool,
+                      lr: float) -> None:
+        """Shared post-step telemetry (the former per-engine
+        ``_record_round``): closes the ``round`` span — blocking on the
+        loss so the measured duration covers the whole dispatched round,
+        with deadline-overrun attribution in the recorder — and emits the
+        loss/lr/variance/grad-norm sample at the metrics cadence.  Purely
+        observational; the averaging masks stay seeded."""
+        tel = self.telemetry
+        if t_start is not None:
+            jax.block_until_ready(loss)
+            tel.round_end(t_start, step=step, mix=mix)
+        if tel.due(step):
+            tel.step_metrics(
+                step, loss=loss, lr=lr,
+                norms=norms if self.collect_norms else None,
+                grads=self._pending_grads,
+            )
+            self._pending_grads = None
 
     # -- elastic growth ----------------------------------------------------------
     def _admit(self, state: SimState, fr, epoch: int) -> SimState:
@@ -607,6 +702,10 @@ class DecentralizedSimulator:
         topo = self.topology.resized(m)
         if topo.controller is not None and old_ctl is not None:
             topo.controller.adopt(old_ctl)
+        if topo.controller is not None:
+            # the rebuilt controller keeps routing events into the run's
+            # recorder (same stream across the membership change)
+            topo.controller.bind_recorder(self.telemetry)
         self.topology = topo
         self.n = m
         if self.shard_nodes:
@@ -655,6 +754,7 @@ class DecentralizedSimulator:
         ctl = self.topology.controller
         if ctl is not None:
             d["controller"] = ctl.state_dict()
+        d["telemetry"] = self.telemetry.state_dict()
         return d
 
     def restore_extra(self, d: dict) -> None:
@@ -680,6 +780,9 @@ class DecentralizedSimulator:
         ctl = self.topology.controller
         if ctl is not None and d.get("controller") is not None:
             ctl.load_state_dict(d["controller"])
+        if d.get("telemetry") is not None:
+            # resumed counters/span totals continue instead of restarting
+            self.telemetry.load_state_dict(d["telemetry"])
 
     # -- full run helper ---------------------------------------------------------
     def run(

@@ -143,6 +143,7 @@ class SPMDTrainer:
         donate: bool = True,
         bucket_mb: Optional[float] = None,
         debug_no_retrace: bool = False,
+        telemetry=None,
     ):
         """mix_every: gossip once every H optimizer steps (local-SGD ×
         decentralized; beyond-paper — the limit of the paper's Obs. 5 that
@@ -215,14 +216,26 @@ class SPMDTrainer:
                 "DecentralizedSimulator for true mid-run growth"
             )
         self._last_membership = None
-        # observational wall-clock deadline trace (GossipDeadline runs): the
-        # seeded model drives the masks — determinism and engine equivalence
-        # need that — while the engine records MEASURED per-round durations
-        # and overruns against the same deadline.  Enabling it synchronizes
-        # once per step (block on the loss), which the trace documents.
-        self._deadline_ms = getattr(self.fault_model, "deadline_ms", None)
-        self.round_ms: list = []
-        self.deadline_overruns = 0
+        # unified run telemetry (repro.telemetry): the shared recorder
+        # carries the observational wall-clock deadline trace
+        # (GossipDeadline runs) — the seeded model drives the masks, the
+        # recorder logs MEASURED per-round durations and overruns against
+        # the same deadline; enabling timing synchronizes once per step
+        # (block on the loss), which the trace documents.  Sink-attached
+        # recorders additionally stream counters/gauges/events/variance.
+        from repro.telemetry import MetricsRecorder
+
+        self.telemetry = (
+            telemetry if telemetry is not None else MetricsRecorder()
+        )
+        self.telemetry.configure(
+            deadline_ms=getattr(self.fault_model, "deadline_ms", None)
+        )
+        if topology.controller is not None:
+            topology.controller.bind_recorder(self.telemetry)
+        self._pn_bytes: Optional[int] = None
+        self._last_program = None
+        self._pending_grads = None
         self.fused_apply = bool(fused_apply)
         if self.fused_apply:
             hyper = optimizer.hyper or {}
@@ -276,6 +289,46 @@ class SPMDTrainer:
         self.debug_no_retrace = bool(debug_no_retrace)
         self._was_warm = False
         self._build_shardings()
+
+    # -- telemetry views -------------------------------------------------------
+    # round_ms / deadline_overruns were per-engine lists before the shared
+    # recorder existed; they stay as thin views for backward compatibility.
+    @property
+    def round_ms(self) -> list:
+        return self.telemetry.round_ms
+
+    @property
+    def deadline_overruns(self) -> int:
+        return self.telemetry.deadline_overruns
+
+    @property
+    def _deadline_ms(self):
+        return self.telemetry.deadline_ms
+
+    def _per_node_bytes(self, params: PyTree) -> int:
+        """Per-node parameter bytes P for comm billing (stacked leaves
+        carry the gossip axis first)."""
+        if self._pn_bytes is None:
+            self._pn_bytes = sum(
+                int(np.prod(x.shape[1:])) * jnp.dtype(x.dtype).itemsize
+                for x in jax.tree.leaves(params)
+            )
+        return self._pn_bytes
+
+    def _bill_comm(self, program, params: PyTree, step: int, fr) -> None:
+        """Bill one mixing-program application at dispatch time (bytes on
+        the wire + permute count) — the same accounting
+        ``benchmarks/ada.py::_total_comm`` replays offline."""
+        if program is None or not self.telemetry.active:
+            return
+        alive = link = None
+        if fr is not None:
+            alive = np.asarray(fr.alive, np.float64)
+            link = fr.link_up
+        self.telemetry.comm(
+            program, self._per_node_bytes(params), step=step,
+            alive=alive, link_up=link,
+        )
 
     def _retrace_guard(self, warm: bool, label: str):
         """``debug_no_retrace`` guard around a warm cached-executable call
@@ -779,6 +832,12 @@ class SPMDTrainer:
             loss, grads, norms = self._bucket_grads_fn(batch)(
                 state.params, batch
             )
+            # the bucketed path is the one place grads materialize outside
+            # the fused step executable — stash them for the grad-norm
+            # gauge (host work deferred to the post-step metrics emission)
+            self._pending_grads = (
+                grads if self.telemetry.due(state.step) else None
+            )
             has_m = state.opt_state != ()
             t_mats, m_mats, g_mats = self._bucket_split_fn(state, grads, has_m)(
                 state.params, state.opt_state, grads
@@ -789,6 +848,7 @@ class SPMDTrainer:
             out_t, out_m = [], []
             window: deque = deque()
             for b, w in enumerate(layout.widths):
+                tb = self.telemetry.span_start()
                 if len(window) >= MAX_INFLIGHT_BUCKETS:
                     jax.block_until_ready(window.popleft())
                 fn = self._bucket_fn(program, w, has_m, fault is not None)
@@ -807,6 +867,7 @@ class SPMDTrainer:
                     t2, tok = res
                 out_t.append(t2)
                 window.append(tok)
+                self.telemetry.bucket_span(tb, step=state.step, index=b)
             new_params, new_opt, tok = self._bucket_merge_fn(state, has_m)(
                 out_t, out_m, tok
             )
@@ -838,6 +899,7 @@ class SPMDTrainer:
         key = None if program is None else program.cache_key
         if faulty:
             key = (key, "faulty")
+        self._last_program = program  # comm billing reuses this resolution
         self._was_warm = key in self._step_cache
         if key in self._step_cache:
             return self._step_cache[key]
@@ -927,23 +989,29 @@ class SPMDTrainer:
         return fn
 
     # -- public API ------------------------------------------------------------------
-    def _record_round(self, loss, t_start) -> None:
-        """Measured wall-clock round trace for deadline runs (see
-        ``__init__``): blocks on the loss so the recorded duration covers
-        the whole dispatched round, then counts it against the model's
-        ``deadline_ms``.  Purely observational — masks stay seeded."""
-        if t_start is None:
-            return
-        jax.block_until_ready(loss)
-        ms = (time.perf_counter() - t_start) * 1e3
-        self.round_ms.append(ms)
-        if ms > float(self._deadline_ms):
-            self.deadline_overruns += 1
+    def _finish_round(self, loss, norms, t_start, *, step: int, mix: bool,
+                      lr: float) -> None:
+        """Shared post-step telemetry (the former per-engine
+        ``_record_round``): closes the ``round`` span — blocking on the
+        loss so the measured duration covers the whole dispatched round,
+        with deadline-overrun attribution in the recorder — and emits the
+        loss/lr/variance/grad-norm sample at the metrics cadence.  Purely
+        observational; the averaging masks stay seeded."""
+        tel = self.telemetry
+        if t_start is not None:
+            jax.block_until_ready(loss)
+            tel.round_end(t_start, step=step, mix=mix)
+        if tel.due(step):
+            tel.step_metrics(
+                step, loss=loss, lr=lr,
+                norms=norms if self.collect_norms else None,
+                grads=self._pending_grads,
+            )
+            self._pending_grads = None
 
     def train_step(self, state: TrainState, batch: PyTree, lr: float, *, epoch: int = 0):
-        t_start = (
-            time.perf_counter() if self._deadline_ms is not None else None
-        )
+        tel = self.telemetry
+        t_start = tel.round_start()
         ctl = self.topology.controller
         fr = None
         if self.fault_model is not None and self.g > 1:
@@ -958,6 +1026,8 @@ class SPMDTrainer:
                     self.topology, fr, node, step=state.step, epoch=epoch,
                     mix_every=self.mix_every,
                 )
+                if tel.active:
+                    tel.event("rejoin", state.step, data={"node": int(node)})
                 with _set_mesh(self.mesh):
                     state = TrainState(
                         adopt_neighbor_average(state.params, node, nbrs),
@@ -971,15 +1041,27 @@ class SPMDTrainer:
                     self.topology, fr, node, step=state.step, epoch=epoch,
                     mix_every=self.mix_every,
                 )
+                if tel.active:
+                    tel.event("depart", state.step, data={"node": int(node)})
                 with _set_mesh(self.mesh):
                     state = TrainState(
                         drain_handoff(state.params, node, nbrs, fr.alive),
                         drain_handoff(state.opt_state, node, nbrs, fr.alive),
                         state.step,
                     )
+            prev_membership = self._last_membership
             self._last_membership = track_membership(
                 self._last_membership, fr, ctl, state.step
             )
+            if (
+                tel.active
+                and prev_membership is not None
+                and self._last_membership != prev_membership
+            ):
+                tel.event(
+                    "membership", state.step,
+                    data={"alive": [bool(b) for b in self._last_membership]},
+                )
         if ctl is not None and self.g > 1 and ctl.should_probe(state.step):
             with _set_mesh(self.mesh):
                 if fr is not None:
@@ -1002,6 +1084,8 @@ class SPMDTrainer:
                     from repro.core.consensus import consensus_distance_jit
 
                     xi = consensus_distance_jit(state.params)
+            if tel.active:
+                tel.gauge("xi", float(xi), step=state.step)
             ctl.observe(float(xi), state.step)
         mix = (state.step + 1) % self.mix_every == 0
         # Time-varying schedules advance per *gossip round*, not per raw
@@ -1021,17 +1105,22 @@ class SPMDTrainer:
             if program is not None:
                 from repro.core.faults import realization_arrays
 
+                self._bill_comm(program, state.params, state.step, fr)
                 fault = realization_arrays(fr) if fr is not None else None
                 p, o, loss, norms = self._bucketed_step(
                     state, batch, lr, program, fault
                 )
-                self._record_round(loss, t_start)
+                self._finish_round(
+                    loss, norms, t_start, step=state.step, mix=True, lr=lr
+                )
                 return TrainState(p, o, state.step + 1), loss, norms
         fn = self.step_fn(
             epoch, step=state.step // self.mix_every,
             mix=mix or self.topology.centralized,
             program_alive=palive,
         )
+        if mix and self.g > 1 and not self.topology.centralized:
+            self._bill_comm(self._last_program, state.params, state.step, fr)
         args = (state.params, state.opt_state, batch, jnp.float32(lr))
         if fr is not None:
             from repro.core.faults import realization_arrays
@@ -1045,7 +1134,7 @@ class SPMDTrainer:
             warm, f"spmd step {state.step}"
         ):
             p, o, loss, norms = fn(*args)
-        self._record_round(loss, t_start)
+        self._finish_round(loss, norms, t_start, step=state.step, mix=mix, lr=lr)
         return TrainState(p, o, state.step + 1), loss, norms
 
     # -- crash-consistent resume -------------------------------------------------
@@ -1077,6 +1166,7 @@ class SPMDTrainer:
         ctl = self.topology.controller
         if ctl is not None:
             d["controller"] = ctl.state_dict()
+        d["telemetry"] = self.telemetry.state_dict()
         return d
 
     def restore_extra(self, d: dict) -> None:
@@ -1096,6 +1186,9 @@ class SPMDTrainer:
         ctl = self.topology.controller
         if ctl is not None and d.get("controller") is not None:
             ctl.load_state_dict(d["controller"])
+        if d.get("telemetry") is not None:
+            # resumed counters/span totals continue instead of restarting
+            self.telemetry.load_state_dict(d["telemetry"])
 
     def lower_step(self, shape, *, epoch: int = 0, step: int = 0):
         """Abstract lowering for the dry-run: ShapeDtypeStructs only."""
@@ -1267,6 +1360,19 @@ def main() -> None:
                          "tracking; fault realizations are pure fn(seed, "
                          "step), so the continued run is bit-identical to "
                          "an uninterrupted one)")
+    ap.add_argument("--telemetry", default="",
+                    help="stream structured run telemetry (JSONL) to this "
+                         "path: per-step spans, comm-bytes counters, "
+                         "loss/xi/grad-norm gauges, streamed DBench "
+                         "variance, and controller/membership/checkpoint "
+                         "events; inspect with "
+                         "python -m repro.telemetry summarize PATH "
+                         "(with --resume the file is appended, and "
+                         "counters continue from the checkpoint)")
+    ap.add_argument("--metrics-every", type=int, default=10,
+                    help="gauge/variance emission cadence in steps "
+                         "(with --telemetry; spans and counters are "
+                         "per-step)")
     args = ap.parse_args()
 
     import jax
@@ -1322,13 +1428,42 @@ def main() -> None:
         consensus_probe_every=args.consensus_every,
         fault_model=fault_model,
     )
+    recorder = None
+    if args.telemetry:
+        from repro.telemetry import JsonlSink, MetricsRecorder
+
+        recorder = MetricsRecorder(
+            sinks=[JsonlSink(args.telemetry, append=args.resume)],
+            metrics_every=args.metrics_every, record_spans=True,
+        )
     trainer = SPMDTrainer(
         cfg, mesh, topo, get_optimizer(args.optimizer), collect_norms=True,
         mixing=args.mixing, mix_every=args.mix_every,
         mix_rounds=args.mix_rounds, hub_balance=args.hub_balance,
         fused_apply=args.fused_apply, donate=False,
-        bucket_mb=args.bucket_mb,
+        bucket_mb=args.bucket_mb, telemetry=recorder,
     )
+    if recorder is not None:
+        run = {
+            "engine": "spmd",
+            "config": {k: v for k, v in sorted(vars(args).items())},
+            "topology": topo.describe(),
+            "mesh": {str(k): int(v) for k, v in dict(mesh.shape).items()},
+            "seed": 0,
+            "resumed": bool(args.resume),
+        }
+        try:  # provenance only — absent git must not block a run
+            import subprocess
+
+            rev = subprocess.run(
+                ["git", "rev-parse", "HEAD"], capture_output=True,
+                text=True, timeout=5,
+            )
+            if rev.returncode == 0:
+                run["git"] = rev.stdout.strip()
+        except Exception:
+            pass
+        recorder.manifest(run)
     # report the apply path the step will ACTUALLY take: fused_apply falls
     # back to the interpreter for non-PPermute programs (complete, dense)
     apply_mode = "interpreter"
@@ -1355,6 +1490,9 @@ def main() -> None:
         )
         trainer.restore_extra(load_checkpoint_extra(args.ckpt_dir, start_step) or {})
         state = TrainState(restored["p"], restored["o"], start_step)
+        trainer.telemetry.event(
+            "checkpoint_restore", int(start_step), data={"dir": args.ckpt_dir}
+        )
         print(f"resumed from {args.ckpt_dir} at step {start_step}")
     src = SyntheticLM(vocab=cfg.vocab, seq_len=args.seq, seed=0)
     scale = lr_scale(
@@ -1377,13 +1515,19 @@ def main() -> None:
                 {"p": state.params, "o": state.opt_state},
                 extra=trainer.snapshot_extra(),
             )
+            trainer.telemetry.event(
+                "checkpoint_save", t + 1, data={"dir": args.ckpt_dir}
+            )
     print(f"{args.steps} steps in {time.time()-t0:.1f}s")
     if trainer.round_ms:
         ms = np.asarray(trainer.round_ms)
-        print(f"deadline trace: median round {np.median(ms):.1f}ms "
-              f"p95 {np.percentile(ms, 95):.1f}ms | measured overruns "
-              f"{trainer.deadline_overruns}/{len(ms)} "
-              f"(deadline {trainer._deadline_ms}ms; masks stay seeded)")
+        line = (f"round trace: median {np.median(ms):.1f}ms "
+                f"p95 {np.percentile(ms, 95):.1f}ms")
+        if trainer._deadline_ms is not None:
+            line += (f" | measured overruns "
+                     f"{trainer.deadline_overruns}/{len(ms)} "
+                     f"(deadline {trainer._deadline_ms}ms; masks stay seeded)")
+        print(line)
     if topo.controller is not None:
         ctl = topo.controller
         rungs = " -> ".join(str(ctl.ladder[r]) for _, r in [(0, 0)] + ctl.transitions)
@@ -1391,6 +1535,10 @@ def main() -> None:
             f"consensus controller: xi0={ctl.xi0} rungs {rungs} "
             f"handoff_step={ctl.handoff_step}"
         )
+    if args.telemetry:
+        trainer.telemetry.close()
+        print(f"telemetry: {args.telemetry} "
+              f"(python -m repro.telemetry summarize {args.telemetry})")
 
 
 if __name__ == "__main__":

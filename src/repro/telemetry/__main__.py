@@ -1,0 +1,7 @@
+"""``python -m repro.telemetry summarize|diff run.jsonl``."""
+import sys
+
+from repro.telemetry.summarize import main
+
+if __name__ == "__main__":
+    sys.exit(main())

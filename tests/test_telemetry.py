@@ -1,0 +1,342 @@
+"""Unified run telemetry (src/repro/telemetry/).
+
+Pins the PR's acceptance bars:
+
+  * the recorder is provably free — with telemetry enabled the simulator
+    compiles the SAME executable set as with it disabled, and
+    ``debug_no_retrace`` / ``assert_executables_preenumerated`` hold;
+  * the streamed ``variance`` records equal the offline
+    ``DBenchRecorder`` computation (same function, same array);
+  * the JSONL stream round-trips summarize/diff, including a --resume
+    crossing where counters continue but per-process ``round_ms`` views
+    restart;
+  * controller transition/rearm/redensify events route through ONE
+    coalescing implementation, so the event stream is engine-independent;
+  * the CLI summarize exits clean on the committed fixture.
+"""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.invariants import verify_bench_payload
+from repro.analysis.report import InvariantViolation
+from repro.analysis.recompile import assert_executables_preenumerated
+from repro.core.dbench import DBenchRecorder, variance_report
+from repro.core.dsgd import make_topology
+from repro.core.faults import make_fault_model
+from repro.core.schedule import program_comm_bytes
+from repro.core.simulator import DecentralizedSimulator
+from repro.optim.sgd import sgd
+from repro.telemetry import (
+    JsonlSink, MemorySink, MetricsRecorder, coalesce_into, read_jsonl,
+)
+from repro.telemetry.schema import SchemaError, validate_record
+from repro.telemetry.summarize import (
+    diff_summaries, main as cli_main, render_summary, summarize,
+)
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "data",
+                       "telemetry_fixture.jsonl")
+
+N = 4
+
+
+def _quad_loss(p, b):
+    return jnp.mean((b - p["w"]) ** 2, axis=(-2, -1))
+
+
+def _run_sim(steps=5, telemetry=None, topo_name="d_ring", fault_model=None,
+             collect_norms=True, **kw):
+    topo = make_topology(topo_name, N, fault_model=fault_model)
+    sim = DecentralizedSimulator(
+        _quad_loss, sgd(momentum=0.9), topo, collect_norms=collect_norms,
+        telemetry=telemetry, **kw,
+    )
+    state = sim.init({"w": jnp.zeros(3)})
+    traces = []
+    for t in range(steps):
+        b = jax.random.normal(jax.random.PRNGKey(t), (N, 2, 3))
+        state, loss, norms = sim.train_step(state, b, 0.05)
+        traces.append((np.asarray(loss), np.asarray(norms)))
+    return sim, traces
+
+
+# ---------------------------------------------------------------------------
+# recorder units
+# ---------------------------------------------------------------------------
+
+def test_coalesce_into_merges_same_step_reasons():
+    events = []
+    assert coalesce_into(events, 3, "depart") == "depart"
+    assert coalesce_into(events, 3, "rejoin") == "depart+rejoin"
+    assert coalesce_into(events, 3, "depart") is None  # idempotent re-arm
+    assert coalesce_into(events, 4, "depart") == "depart"
+    assert events == [(3, "depart+rejoin"), (4, "depart")]
+
+
+def test_counters_accumulate_and_emit_totals():
+    sink = MemorySink()
+    rec = MetricsRecorder(sinks=[sink])
+    rec.counter("comm_bytes", 10, step=0)
+    rec.counter("comm_bytes", 5, step=1)
+    assert rec.totals["comm_bytes"] == 15
+    assert [r["total"] for r in sink.records] == [10, 15]
+    for r in sink.records:
+        validate_record(r)
+
+
+def test_inert_recorder_is_free():
+    rec = MetricsRecorder()  # the default every engine constructs
+    assert not rec.active and not rec.timing
+    assert rec.round_start() is None
+    rec.round_end(None, step=0)  # no-op, no crash
+    rec.gauge("loss", 1.0, step=0)
+    rec.counter("x", 1, step=0)
+    assert not rec.due(0) and rec.round_ms == []
+
+
+def test_span_timing_gating():
+    # sinks alone do NOT turn on per-step loss syncs (bench safety) …
+    assert MetricsRecorder(sinks=[MemorySink()]).round_start() is None
+    # … the CLI's record_spans=True does …
+    assert MetricsRecorder(
+        sinks=[MemorySink()], record_spans=True
+    ).round_start() is not None
+    # … and a deadline fault model does even without sinks (the old
+    # per-engine _record_round behaviour)
+    assert MetricsRecorder(deadline_ms=30.0).round_start() is not None
+
+
+def test_round_overrun_attribution():
+    import time
+
+    sink = MemorySink()
+    rec = MetricsRecorder(sinks=[sink], record_spans=True, deadline_ms=1.0)
+    rec.round_end(time.perf_counter() - 0.05, step=0)   # 50ms > 1ms
+    rec.round_end(time.perf_counter(), step=1)          # ~0ms, no overrun
+    spans = [r for r in sink.records if r["kind"] == "span"]
+    assert [s["overrun"] for s in spans] == [True, False]
+    assert spans[0]["deadline_ms"] == 1.0
+    assert rec.deadline_overruns == 1 and len(rec.round_ms) == 2
+
+
+def test_state_dict_roundtrip_continues_totals():
+    rec = MetricsRecorder(deadline_ms=1.0)
+    rec.counter("comm_bytes", 100, step=0)
+    rec.round_end(rec.round_start(), step=0)
+    saved = rec.state_dict()
+    json.dumps(saved)  # must ride the checkpoint extra payload
+
+    fresh = MetricsRecorder(deadline_ms=1.0)
+    fresh.load_state_dict(saved)
+    assert fresh.totals["comm_bytes"] == 100
+    assert fresh.rounds_total == 1
+    assert fresh.round_ms == []  # per-process view restarts
+    fresh.round_end(fresh.round_start(), step=1)
+    assert fresh.rounds_total == 2 and len(fresh.round_ms) == 1
+
+
+def test_schema_rejects_malformed_records():
+    good = {"kind": "gauge", "step": 0, "name": "xi", "value": 1.0}
+    validate_record(good)
+    for bad in (
+        {"kind": "nope"},
+        {"kind": "counter", "step": 0, "name": "x", "inc": 1},  # no total
+        {**good, "extra": 1},                         # unknown field
+        {**good, "step": "zero"},                     # wrong type
+        {"kind": "span", "step": 0, "name": "round"},  # missing ms
+    ):
+        with pytest.raises(SchemaError):
+            validate_record(bad)
+
+
+# ---------------------------------------------------------------------------
+# engine integration: provably free + faithful counters
+# ---------------------------------------------------------------------------
+
+def test_telemetry_on_compiles_same_executable_set():
+    off, _ = _run_sim(steps=5)
+    rec = MetricsRecorder(
+        sinks=[MemorySink()], metrics_every=1, record_spans=True
+    )
+    on, _ = _run_sim(steps=5, telemetry=rec, debug_no_retrace=True)
+    assert sorted(map(str, on._step_cache)) == sorted(map(str, off._step_cache))
+    assert_executables_preenumerated(on)
+
+
+def test_comm_counters_match_offline_accounting():
+    rec = MetricsRecorder(sinks=[MemorySink()])
+    sim, _ = _run_sim(steps=5, telemetry=rec)
+    prog = sim.topology.program_at(step=0, epoch=0)
+    pbytes = 3 * 4  # {"w": zeros(3)} float32, per node
+    assert rec.totals["comm_bytes"] == 5 * program_comm_bytes(prog, pbytes)
+    assert rec.totals["program_applications"] == 5
+    assert rec.totals["permutes"] == 5 * len(prog.ops)
+
+
+def test_streamed_variance_equals_offline_dbench():
+    sink = MemorySink()
+    rec = MetricsRecorder(sinks=[sink], metrics_every=1)
+    _, traces = _run_sim(steps=5, telemetry=rec)
+    offline = DBenchRecorder(impl="ref", n_nodes=N)
+    for t, (loss, norms) in enumerate(traces):
+        offline.record(t, loss, norms)
+    var_recs = [r for r in sink.records if r["kind"] == "variance"]
+    assert len(var_recs) == 5
+    for t, r in enumerate(var_recs):
+        ref = variance_report(offline.norms[t])
+        for name, per_leaf in ref.items():
+            np.testing.assert_allclose(
+                r["per_layer"][name], per_leaf, rtol=1e-12
+            )
+            assert r["metrics"][name] == pytest.approx(
+                float(np.mean(per_leaf))
+            )
+    # the gini series the offline recorder derives matches the stream too
+    gini = offline.metric_series("gini").mean(axis=-1)
+    streamed = [r["metrics"]["gini"] for r in var_recs]
+    np.testing.assert_allclose(streamed, gini, rtol=1e-12)
+
+
+def test_deadline_trace_views_preserved():
+    fm = make_fault_model("deadline", N, rate=0.4, seed=5)
+    sim, _ = _run_sim(steps=5, fault_model=fm, collect_norms=False)
+    # the public attributes survive as views over the shared recorder
+    assert len(sim.round_ms) == 5
+    assert sim.round_ms is sim.telemetry.round_ms
+    assert sim.deadline_overruns == sim.telemetry.deadline_overruns
+    assert sim._deadline_ms == fm.deadline_ms
+
+
+# ---------------------------------------------------------------------------
+# controller events: one coalescing implementation for both engines
+# ---------------------------------------------------------------------------
+
+def test_controller_event_stream_engine_independent():
+    def drive(recorder):
+        topo = make_topology("d_ada", 8, k0=6, consensus_target=0.5)
+        ctl = topo.controller
+        ctl.bind_recorder(recorder)
+        ctl.observe(1.0, 0)          # seeds xi0
+        ctl.observe(0.4, 1)          # fires: transition to rung 1
+        ctl.rearm(3, "depart")       # membership events, same step:
+        ctl.rearm(3, "rejoin")       # distinct reasons coalesce …
+        ctl.rearm(3, "depart")       # … duplicates are dropped
+        ctl.rearm(5, "join")
+        return ctl
+
+    a_sink, b_sink = MemorySink(), MemorySink()
+    ctl_a = drive(MetricsRecorder(sinks=[a_sink]))
+    ctl_b = drive(MetricsRecorder(sinks=[b_sink]))
+    assert a_sink.records == b_sink.records  # identical streams
+    assert ctl_a.events == ctl_b.events == [(3, "depart+rejoin"), (5, "join")]
+    names = [(r["step"], r["name"], (r.get("data") or {}).get("reason"))
+             for r in a_sink.records]
+    assert names == [
+        (1, "transition", None),
+        (3, "controller", "depart"),
+        (3, "controller", "depart+rejoin"),  # re-emitted on merge
+        (5, "controller", "join"),
+    ]
+    # consumers keep the LAST emission per (step, name): the rendered
+    # summary shows the merged entry once
+    out = render_summary(summarize(
+        [{"kind": "manifest", "schema": 1, "run": {}}] + a_sink.records
+    ))
+    assert "depart+rejoin" in out
+    assert out.count("controller") == 2  # steps 3 and 5, deduped
+
+
+# ---------------------------------------------------------------------------
+# JSONL round-trip: summarize / diff / --resume crossing
+# ---------------------------------------------------------------------------
+
+def test_jsonl_resume_roundtrip(tmp_path):
+    path = str(tmp_path / "run.jsonl")
+    rec = MetricsRecorder(
+        sinks=[JsonlSink(path)], metrics_every=2, record_spans=True
+    )
+    rec.manifest({"engine": "simulator", "topology": "d_ring", "n": N})
+    sim, _ = _run_sim(steps=4, telemetry=rec)
+    extra = sim.snapshot_extra()
+    json.dumps(extra["telemetry"])  # checkpoint-serializable
+    rec.close()
+
+    # resumed segment: fresh process = fresh recorder, appending sink
+    rec2 = MetricsRecorder(
+        sinks=[JsonlSink(path, append=True)], metrics_every=2,
+        record_spans=True,
+    )
+    rec2.manifest({"engine": "simulator", "topology": "d_ring", "n": N,
+                   "resumed": True})
+    topo = make_topology("d_ring", N)
+    sim2 = DecentralizedSimulator(
+        _quad_loss, sgd(momentum=0.9), topo, collect_norms=True,
+        telemetry=rec2,
+    )
+    state = sim2.init({"w": jnp.zeros(3)})
+    sim2.restore_extra(extra)
+    state = dataclasses.replace(state, step=4)  # resume at the ckpt step
+    for t in range(4, 8):
+        b = jax.random.normal(jax.random.PRNGKey(t), (N, 2, 3))
+        state, *_ = sim2.train_step(state, b, 0.05)
+    rec2.close()
+
+    # totals continue across the crossing; per-process views restart
+    assert rec2.totals["program_applications"] == 8
+    assert rec2.rounds_total == 8 and len(rec2.round_ms) == 4
+
+    records = read_jsonl(path)  # validates every line
+    s = summarize(records)
+    assert s["segments"] == 2 and s["last_step"] == 7
+    assert s["counters"]["program_applications"] == 8
+    out = render_summary(s)
+    assert "segments: 2 (resumed run)" in out
+    d = diff_summaries(s, s, labels=("a", "b"))
+    assert "last_step" in d
+
+
+def test_read_jsonl_rejects_corrupt_stream(tmp_path):
+    path = tmp_path / "bad.jsonl"
+    path.write_text('{"kind": "gauge", "step": 0}\n')
+    with pytest.raises(SchemaError, match=r":1:"):
+        read_jsonl(str(path))
+
+
+def test_cli_summarize_exits_clean_on_committed_fixture(capsys):
+    assert os.path.exists(FIXTURE), "committed fixture missing"
+    assert cli_main(["summarize", FIXTURE]) == 0
+    out = capsys.readouterr().out
+    for needle in ("per-phase step time", "comm MiB", "xi last",
+                   "per-layer variance"):
+        assert needle in out, f"summary lost its {needle!r} table"
+    assert cli_main(["diff", FIXTURE, FIXTURE]) == 0
+    assert cli_main(["summarize", FIXTURE + ".nope"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# bench provenance pathway
+# ---------------------------------------------------------------------------
+
+def test_bench_payload_provenance_validation():
+    rec = MetricsRecorder(sinks=[MemorySink()])
+    rec.counter("comm_bytes", 42, step=0)
+    prov = rec.provenance()
+    verify_bench_payload("ada", {"d_ring/n8": {"acc": 1.0,
+                                               "provenance": prov}})
+    for broken in (
+        {**prov, "source": "handwritten"},
+        {**prov, "schema": "one"},
+        {**prov, "counters": {"comm_bytes": "lots"}},
+        {**prov, "rounds": None},
+        "not-a-dict",
+    ):
+        with pytest.raises(InvariantViolation, match="provenance"):
+            verify_bench_payload(
+                "ada", {"d_ring/n8": {"acc": 1.0, "provenance": broken}}
+            )
